@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: tiny trainable tasks standing in for the
+paper's CIFAR/PTB workloads (CPU container; reduced scale, same phenomena)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timer(fn, *args, n=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def synth_images(key, n, hw=8, c=3, classes=10, template_seed=1234):
+    """Synthetic image classification with learnable structure: FIXED class
+    templates + noise (stand-in for CIFAR). Templates are derived from
+    template_seed so train and validation splits share classes."""
+    kx, kn = jax.random.split(key, 2)
+    templates = jax.random.normal(jax.random.key(template_seed),
+                                  (classes, hw, hw, c))
+    labels = jax.random.randint(kx, (n,), 0, classes)
+    noise = jax.random.normal(kn, (n, hw, hw, c))
+    x = templates[labels] + 0.7 * noise
+    return x, labels
+
+
+def ce_loss(logits, labels):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], 1).squeeze(-1)
+    return (lse - ll).mean()
+
+
+def accuracy(logits, labels):
+    return float((logits.argmax(-1) == labels).mean())

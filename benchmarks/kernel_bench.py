@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks (paper §5.3 conversion/MatMul units).
+
+On this CPU container the Pallas kernels execute in interpret mode (Python
+per-op — correctness harness, not a speed path), so wall-times are reported
+for (a) the jitted simulation path (the CPU production path) and (b) the
+interpret-mode kernel at a reduced shape (to show it runs). TPU numbers
+come from the roofline analysis, not from this host.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timer
+from repro.core import HBFP8_16, bfp
+from repro.core.hbfp_ops import hbfp_matmul
+from repro.kernels import ops
+
+
+def run(log=print):
+    rows = []
+    log("# Kernel microbench (CPU)")
+    x = jax.random.normal(jax.random.key(0), (512, 512))
+    w = jax.random.normal(jax.random.key(1), (512, 512)) * 0.05
+
+    f_fp32 = jax.jit(lambda x, w: x @ w)
+    us = timer(f_fp32, x, w)
+    rows.append(("matmul_fp32_512", us))
+    log(f"  fp32 matmul 512^3          : {us:9.1f} us")
+
+    f_sim = jax.jit(lambda x, w: hbfp_matmul(x, w, HBFP8_16))
+    us_sim = timer(f_sim, x, w)
+    rows.append(("hbfp_matmul_sim_512", us_sim))
+    log(f"  hbfp8 matmul (sim path)    : {us_sim:9.1f} us "
+        f"({us_sim / us:.2f}x fp32 — sim adds quantize ops; on TPU the "
+        "fused int8 kernel is the fast path)")
+
+    f_q = jax.jit(lambda x: bfp.quantize(x, 8, (1, None)))
+    usq = timer(f_q, x)
+    rows.append(("bfp_quantize_sim_512", usq))
+    log(f"  bfp quantize 512x512 (sim) : {usq:9.1f} us")
+
+    f_pack = jax.jit(lambda x: bfp.pack(x, 8, (128, 128)).mantissa)
+    usp = timer(f_pack, x)
+    rows.append(("bfp_pack_512", usp))
+    log(f"  bfp pack (int8+exp)        : {usp:9.1f} us")
+
+    xs = x[:128, :128]
+    ws = w[:128, :128]
+    us_k = timer(lambda: ops.hbfp_matmul(xs, ws, mantissa_bits=8, bm=64,
+                                         bk=64, bn=64), n=3, warmup=1)
+    rows.append(("hbfp_matmul_pallas_interp_128", us_k))
+    log(f"  pallas kernel 128^3 (interp): {us_k:9.1f} us "
+        "(interpret mode — correctness harness only)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

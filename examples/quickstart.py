@@ -1,0 +1,52 @@
+"""Quickstart: the HBFP public API in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import HBFP8_16, HBFPConfig, bfp, hbfp_matmul
+from repro.core.opt_shell import hbfp_apply_updates, narrow_params
+
+# ---------------------------------------------------------------------------
+# 1. BFP quantization: one shared exponent per tile (paper Fig. 1b)
+# ---------------------------------------------------------------------------
+x = jax.random.normal(jax.random.key(0), (256, 512))
+xq = bfp.quantize(x, mantissa_bits=8, tile_shape=(1, None))  # per-row exps
+print("max quantization error (8-bit):",
+      float(jnp.abs(x - xq).max()))
+
+packed = bfp.pack(x, 8, (128, 128))  # storage format: int8 + exponents
+print(f"packed size: {packed.nbytes} bytes vs f32 {x.nbytes} "
+      f"({x.nbytes / packed.nbytes:.1f}x smaller)")
+
+# ---------------------------------------------------------------------------
+# 2. HBFP matmul: BFP forward AND backward dot products (paper §4.1)
+# ---------------------------------------------------------------------------
+w = jax.random.normal(jax.random.key(1), (512, 128)) * 0.05
+y = hbfp_matmul(x, w, HBFP8_16)
+print("hbfp8 matmul vs fp32 rel err:",
+      float(jnp.abs(y - x @ w).max() / jnp.abs(x @ w).max()))
+
+grads = jax.grad(lambda w: hbfp_matmul(x, w, HBFP8_16).sum())(w)
+print("grad shape (BFP backward):", grads.shape)
+
+# ---------------------------------------------------------------------------
+# 3. The training contract (paper §5.1): wide storage, narrow compute
+# ---------------------------------------------------------------------------
+params = {"ffn_w": w}
+narrow = narrow_params(params, HBFP8_16)        # 8-bit fwd/bwd copy
+updates = {"ffn_w": -0.01 * grads}
+params = hbfp_apply_updates(params, updates, HBFP8_16)  # f32 upd -> 16-bit
+print("weights stay wide-BFP fixed points:",
+      bool(jnp.array_equal(params["ffn_w"],
+                           bfp.quantize_weight(params["ffn_w"], HBFP8_16,
+                                               wide=True))))
+
+# ---------------------------------------------------------------------------
+# 4. Custom formats — the paper's design space
+# ---------------------------------------------------------------------------
+for cfg in (HBFPConfig(4, 16, tile=24), HBFPConfig(12, 16, tile=24)):
+    yq = hbfp_matmul(x, w, cfg)
+    print(f"{cfg.name}: rel err "
+          f"{float(jnp.abs(yq - x @ w).max() / jnp.abs(x @ w).max()):.2e}")

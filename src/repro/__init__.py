@@ -1,0 +1,4 @@
+"""HBFP-JAX: Training DNNs with Hybrid Block Floating Point (NIPS 2018)
+as a production multi-pod JAX/Pallas framework. See README.md."""
+
+__version__ = "1.0.0"

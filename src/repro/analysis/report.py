@@ -1,0 +1,82 @@
+"""Render dryrun.json into the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.analysis.report results/dryrun.json
+"""
+import json
+import sys
+
+
+def memory_table(results):
+    lines = ["| arch | shape | mesh | args GiB | temps GiB | total GiB | "
+             "fits v5e 16G |", "|---|---|---|---|---|---|---|"]
+    for cell, rec in sorted(results.items()):
+        if rec.get("status") != "ok" or "memory" not in rec:
+            continue
+        m = rec["memory"]
+        args = m["argument_bytes"] / 2**30
+        temp = m["temp_bytes"] / 2**30
+        tot = m["per_device_total_gib"]
+        fits = "yes" if tot <= 16 else "**no**"
+        lines.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                     f"{args:.2f} | {temp:.2f} | {tot:.2f} | {fits} |")
+    return "\n".join(lines)
+
+
+def roofline_table(results):
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s |"
+             " bound | model/HLO flops | roofline frac | 1-sentence fix |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    fixes = {
+        ("compute", "train"): "more int8-MXU fraction / fewer remat dots",
+        ("memory", "train"): "fuse quantize into matmul (Pallas kernel); "
+        "microbatch + SP to shrink residuals",
+        ("collective", "train"): "BFP-compress DP grad all-reduce; "
+        "reduce-scatter into ZeRO shards",
+        ("memory", "prefill"): "fused HBFP flash attention keeps scores in "
+        "VMEM",
+        ("collective", "prefill"): "shard seq (SP) instead of gathering kv",
+        ("memory", "decode"): "narrow-BFP (int8) weights + cache halve "
+        "reads",
+        ("collective", "decode"): "replicate small weights; all-gather "
+        "cache shards only",
+    }
+    for cell, rec in sorted(results.items()):
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        kind = ("train" if rec["shape"].startswith("train") else
+                "prefill" if rec["shape"].startswith("prefill") else
+                "decode")
+        fix = fixes.get((r["bottleneck"], kind), "-")
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+            f"{r['compute_s']:.3g} | {r['memory_s']:.3g} | "
+            f"{r['collective_s']:.3g} | {r['bottleneck']} | "
+            f"{r.get('useful_flops_ratio', 0):.2f} | "
+            f"{r.get('roofline_fraction', 0):.2%} | {fix} |")
+    skipped = [(rec["arch"], rec["shape"]) for rec in results.values()
+               if rec.get("status") == "skipped"]
+    tail = "\nSkipped cells (assignment rule, DESIGN.md §5): " + \
+        ", ".join(f"{a}×{s}" for a, s in sorted(set(skipped)))
+    return "\n".join(lines) + tail
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    with open(path) as f:
+        results = json.load(f)
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_sk = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_er = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"cells: {n_ok} ok / {n_sk} skipped / {n_er} error\n")
+    print("### Memory (per device)\n")
+    print(memory_table(results))
+    print("\n### Roofline\n")
+    print(roofline_table(results))
+    for cell, rec in sorted(results.items()):
+        if rec.get("status") == "error":
+            print(f"\nERROR {cell}: {rec['error']}")
+
+
+if __name__ == "__main__":
+    main()

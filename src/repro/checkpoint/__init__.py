@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointing import (latest_step, load_checkpoint,
+                                            save_checkpoint)

@@ -1,0 +1,151 @@
+"""Fault-tolerant checkpointing.
+
+Design (DESIGN.md §6):
+  * **mesh-independent**: every leaf is written as a host numpy array keyed
+    by its pytree path — restore re-shards onto *any* mesh (elastic restart
+    after node loss / repartition);
+  * **atomic**: writes go to `step_XXXX.tmp/` then os.replace() to
+    `step_XXXX/`, so a preempted save never corrupts the latest checkpoint;
+  * **compact**: HBFP weight matrices may be stored packed (int mantissa +
+    per-tile exponent = the paper's "2× more compact models") with
+    `packed=True`;
+  * **async**: `save_checkpoint(..., background=True)` snapshots to host
+    memory synchronously (cheap) and writes in a thread, overlapping I/O
+    with the next training steps;
+  * retention: keep the last N checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core import bfp
+from repro.core.formats import HBFPConfig
+from repro.core.opt_shell import is_hbfp_weight
+
+_SEP = "."
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                         for k in path)
+        out[name] = leaf
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state, *,
+                    hbfp: Optional[HBFPConfig] = None, packed: bool = False,
+                    keep: int = 3, background: bool = False,
+                    extra_meta: Optional[dict] = None):
+    """Write `state` (any pytree) at `step`. Returns the final path (or the
+    Thread when background=True)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    # snapshot to host synchronously — cheap relative to the write
+    host = {k: np.asarray(v) for k, v in _flatten(state).items()}
+    meta = {"step": int(step), "keys": sorted(host.keys()),
+            "packed": bool(packed)}
+    if extra_meta:
+        meta.update(extra_meta)
+
+    def write():
+        tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        for name, arr in host.items():
+            if packed and hbfp is not None and arr.ndim >= 2 \
+                    and is_hbfp_weight(name, arr):
+                p = bfp.pack(arr, hbfp.wide_mantissa_bits,
+                             bfp.weight_tile_shape(arr.ndim, hbfp.tile))
+                np.savez(os.path.join(tmp, name + ".npz"),
+                         mantissa=np.asarray(p.mantissa),
+                         exponent=np.asarray(p.exponent),
+                         mantissa_bits=p.mantissa_bits,
+                         tile_shape=np.array(
+                             [-1 if t is None else t for t in p.tile_shape]),
+                         shape=np.array(p.shape))
+            else:
+                np.save(os.path.join(tmp, name + ".npy"), arr)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.replace(tmp, final)
+        # retention
+        steps = sorted(latest_steps(ckpt_dir))
+        for s in steps[:-keep]:
+            shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+        return final
+
+    if background:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    return write()
+
+
+def latest_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp") and \
+                os.path.exists(os.path.join(ckpt_dir, d, "meta.json")):
+            out.append(int(d[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = latest_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, like, step: Optional[int] = None,
+                    shardings=None):
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs). `shardings`: optional matching pytree of
+    NamedShardings — leaves are device_put accordingly (any mesh)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+
+    names = _flatten(like)
+    sh = _flatten(shardings) if shardings is not None else {}
+    loaded = {}
+    for name, leaf in names.items():
+        npy = os.path.join(d, name + ".npy")
+        npz = os.path.join(d, name + ".npz")
+        if os.path.exists(npz):
+            z = np.load(npz)
+            ts = tuple(None if t < 0 else int(t) for t in z["tile_shape"])
+            p = bfp.PackedBFP(z["mantissa"], z["exponent"],
+                              int(z["mantissa_bits"]), ts,
+                              tuple(int(s) for s in z["shape"]))
+            arr = np.asarray(bfp.unpack(p)).astype(leaf.dtype)
+        else:
+            arr = np.load(npy).astype(leaf.dtype)
+        if name in sh and sh[name] is not None:
+            arr = jax.device_put(arr, sh[name])
+        loaded[name] = arr
+
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
+    vals = []
+    for path, _ in leaves_p:
+        nm = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        vals.append(loaded[nm])
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), vals), meta

@@ -1,0 +1,1 @@
+from repro.configs.base import ArchConfig, arch_ids, get_arch

@@ -1,0 +1,249 @@
+"""Block floating point (BFP) quantization — the paper's core numeric transform.
+
+A BFP tile stores fixed-point mantissas sharing one exponent (paper Fig. 1b,
+Eq. 1). Conversion FP→BFP (paper §5.3 hardware: "FP-to-BFP units detect the
+maximum exponent of incoming FP tensors and normalize their mantissas"):
+
+    e   = floor(log2 max|tile|)            (bit-field extraction, exact)
+    δ   = 2^(e - m + 2)                    (m = signed mantissa width)
+    q_i = clip(round(x_i / δ), -(2^(m-1)-1), 2^(m-1)-1)
+    x̂_i = q_i * δ
+
+Rounding is round-to-nearest-even or stochastic (paper §5.3 uses stochastic
+rounding with a Xorshift RNG; the JAX simulation path uses threefry — the
+Pallas kernel implements the paper's xorshift32 in-kernel).
+
+This module provides the pure-jnp *simulation* path (quantize→dequantize in
+f32, exactly like the paper's PyTorch GPU simulation §5.1) plus a *packed*
+representation (int mantissas + per-tile int8 exponents) used by the Pallas
+kernels and by checkpoint compression (the paper's "2× more compact models").
+
+Quantization is idempotent under round-to-nearest (tested property): applying
+Q twice with the same (m, tile) returns the first result bit-exactly, so ops
+may re-quantize already-BFP weights harmlessly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Exponent clamp: below 2^EXP_FLOOR the tile is numerically dead in f32
+# training; clamping keeps δ and 1/δ comfortably inside normal f32 range.
+EXP_FLOOR = -100
+EXP_CEIL = 126
+
+
+def _max_exponent(amax: jax.Array) -> jax.Array:
+    """floor(log2(amax)) via f32 bit-field extraction. amax must be >= 0.
+
+    Exact for normals; subnormals/zero clamp to EXP_FLOOR (they quantize to 0
+    at any realistic mantissa width).
+    """
+    bits = jax.lax.bitcast_convert_type(amax.astype(jnp.float32), jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    return jnp.clip(e, EXP_FLOOR, EXP_CEIL)
+
+
+def pow2(e: jax.Array) -> jax.Array:
+    """Exact 2^e for integer e in the normal f32 range, by constructing the
+    IEEE-754 bit pattern. (XLA's f32 exp2 is polynomial-approximated and can
+    be 1 ulp off, which breaks BFP idempotence/exactness.)"""
+    bits = (e.astype(jnp.int32) + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _tile_view(shape: Tuple[int, ...], tile_shape: Sequence[Optional[int]]):
+    """Resolve a tile spec against a shape.
+
+    tile_shape entries: None ⇒ whole dim shares one exponent; int t ⇒ groups of
+    t along that dim. Returns (padded_shape, grouped_shape, reduce_axes,
+    needs_pad).
+    """
+    if len(tile_shape) != len(shape):
+        raise ValueError(f"tile_shape rank {len(tile_shape)} != x rank {len(shape)}")
+    padded, grouped, reduce_axes = [], [], []
+    for i, (d, t) in enumerate(zip(shape, tile_shape)):
+        t = d if t is None else min(t, d) if d > 0 else 1
+        n = -(-d // t) if d > 0 else 1
+        padded.append(n * t)
+        grouped.extend((n, t))
+        reduce_axes.append(2 * i + 1)
+    needs_pad = tuple(padded) != tuple(shape)
+    return tuple(padded), tuple(grouped), tuple(reduce_axes), needs_pad
+
+
+def tile_scales(x: jax.Array, mantissa_bits: int,
+                tile_shape: Sequence[Optional[int]]) -> jax.Array:
+    """Per-element quantization step δ (broadcast back to x.shape)."""
+    padded, grouped, axes, needs_pad = _tile_view(x.shape, tile_shape)
+    ax = jnp.abs(x.astype(jnp.float32))
+    if needs_pad:
+        ax = jnp.pad(ax, [(0, p - d) for p, d in zip(padded, x.shape)])
+    g = ax.reshape(grouped)
+    amax = g.max(axis=tuple(axes), keepdims=True)
+    e = _max_exponent(amax)
+    delta = pow2(e - mantissa_bits + 2)
+    delta = jnp.broadcast_to(delta, g.shape).reshape(padded)
+    if needs_pad:
+        delta = delta[tuple(slice(0, d) for d in x.shape)]
+    return delta
+
+
+def _round(v: jax.Array, rounding: str, key: Optional[jax.Array]) -> jax.Array:
+    if rounding == "stochastic":
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        u = jax.random.uniform(key, v.shape, dtype=v.dtype)
+        return jnp.floor(v + u)
+    return jnp.rint(v)  # round-half-even, matches TPU/IEEE RNE
+
+
+def quantize(x: jax.Array, mantissa_bits: int,
+             tile_shape: Sequence[Optional[int]],
+             rounding: str = "nearest",
+             key: Optional[jax.Array] = None) -> jax.Array:
+    """FP→BFP→FP simulation: returns the dequantized tensor (dtype of x).
+
+    This is the exact analogue of the paper's GPU simulation (§5.1): values are
+    representable in <mantissa_bits>-bit BFP with one exponent per tile.
+    """
+    if mantissa_bits >= 24:  # ≥ f32 mantissa: identity (paper's fp32 column)
+        return x
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    delta = tile_scales(xf, mantissa_bits, tile_shape)
+    lim = float(2 ** (mantissa_bits - 1) - 1)
+    q = jnp.clip(_round(xf / delta, rounding, key), -lim, lim)
+    return (q * delta).astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# Convenience tile specs used by HBFP ops
+# ----------------------------------------------------------------------------
+
+def act_tile_shape(rank: int, act_block: Optional[int]) -> Tuple[Optional[int], ...]:
+    """Activations/gradients: one exponent per training input (paper §5.1) —
+    i.e. per row of the [..., features] view — optionally sub-tiled along the
+    feature axis (beyond-paper refinement)."""
+    return (1,) * (rank - 1) + (act_block,)
+
+
+def weight_tile_shape(rank: int, tile: Optional[int]) -> Tuple[Optional[int], ...]:
+    """Weights: 2-D tiles on the two outer dims (paper §5.1 tiles conv weights'
+    outer feature-map dims; for matrices that's the whole matrix)."""
+    if rank == 1:
+        return (tile,)
+    return (1,) * (rank - 2) + (tile, tile)
+
+
+def quantize_act(x, cfg, key=None):
+    """Quantize an activation/gradient tensor per the paper's policy."""
+    return quantize(x, cfg.mantissa_bits, act_tile_shape(x.ndim, cfg.act_block),
+                    cfg.rounding, key)
+
+
+def quantize_weight(x, cfg, key=None, wide: bool = False):
+    """Quantize a weight tensor (narrow compute copy, or wide storage copy)."""
+    m = cfg.wide_mantissa_bits if wide else cfg.mantissa_bits
+    return quantize(x, m, weight_tile_shape(x.ndim, cfg.tile), cfg.rounding, key)
+
+
+# ----------------------------------------------------------------------------
+# Packed representation (kernel I/O + checkpoint/model compression)
+# ----------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class PackedBFP:
+    """Storage format: int mantissas + per-tile int8 exponents.
+
+    8/12/16-bit mantissas pack into int8/int16/int16. Realizes the paper's
+    "2× more compact models" (8-bit mantissa vs f32 ⇒ ~4× on the mantissa
+    payload; exponent overhead is 1 byte per tile).
+    """
+
+    def __init__(self, mantissa, exponent, mantissa_bits, tile_shape, shape):
+        self.mantissa = mantissa
+        self.exponent = exponent
+        self.mantissa_bits = int(mantissa_bits)
+        self.tile_shape = tuple(tile_shape)
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.mantissa, self.exponent), (self.mantissa_bits,
+                                                self.tile_shape, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def nbytes(self) -> int:
+        return self.mantissa.nbytes + self.exponent.nbytes
+
+
+def pack(x: jax.Array, mantissa_bits: int,
+         tile_shape: Sequence[Optional[int]],
+         rounding: str = "nearest",
+         key: Optional[jax.Array] = None) -> PackedBFP:
+    """Quantize and pack x into (mantissa, per-tile exponent)."""
+    padded, grouped, axes, needs_pad = _tile_view(x.shape, tile_shape)
+    xf = x.astype(jnp.float32)
+    if needs_pad:
+        xf = jnp.pad(xf, [(0, p - d) for p, d in zip(padded, x.shape)])
+    g = xf.reshape(grouped)
+    amax = jnp.abs(g).max(axis=tuple(axes), keepdims=True)
+    e = _max_exponent(amax)
+    delta = pow2(e - mantissa_bits + 2)
+    lim = float(2 ** (mantissa_bits - 1) - 1)
+    q = jnp.clip(_round(g / delta, rounding, key), -lim, lim)
+    mdt = jnp.int8 if mantissa_bits <= 8 else jnp.int16
+    return PackedBFP(q.astype(mdt).reshape(padded),
+                     e.squeeze(tuple(axes)).astype(jnp.int8),
+                     mantissa_bits, tile_shape, x.shape)
+
+
+def unpack(p: PackedBFP, dtype=jnp.float32) -> jax.Array:
+    padded, grouped, axes, _ = _tile_view(p.shape, p.tile_shape)
+    e = p.exponent.astype(jnp.float32)
+    e = jnp.expand_dims(e, tuple(axes))
+    delta = pow2(e - p.mantissa_bits + 2)
+    g = p.mantissa.reshape(grouped).astype(jnp.float32) * delta
+    out = g.reshape(padded)[tuple(slice(0, d) for d in p.shape)]
+    return out.astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# Narrow floating point simulation (paper Table 1 baseline)
+# ----------------------------------------------------------------------------
+
+def ste(quantizer):
+    """Straight-through estimator wrapper: forward = quantizer(x),
+    backward = identity. Used by the narrow-FP training simulation
+    (benchmarks/table1) — rounding has zero gradient a.e., so without STE
+    no format would train at all."""
+    def f(x):
+        return x + jax.lax.stop_gradient(quantizer(x) - x)
+    return f
+
+
+def simulate_narrow_fp(x: jax.Array, mantissa_bits: int,
+                       exponent_bits: int) -> jax.Array:
+    """Simulate an FP format with the given mantissa/exponent widths
+    (mantissa_bits counts the implicit leading bit, as the paper does for
+    FP32 = 24-bit mantissa / 8-bit exponent). Used by benchmarks/table1."""
+    xf = x.astype(jnp.float32)
+    e = _max_exponent(jnp.abs(xf))
+    # exponent range of an IEEE-like format with bias 2^(eb-1)-1
+    emax = 2 ** (exponent_bits - 1) - 1
+    emin = 1 - emax
+    # flush values below the format's smallest normal to zero, saturate above
+    delta = pow2(jnp.clip(e, emin, emax) - mantissa_bits + 1)
+    q = jnp.rint(xf / delta) * delta
+    q = jnp.where(e < emin, 0.0, q)
+    maxv = (2.0 - 2.0 ** (1 - mantissa_bits)) * 2.0 ** emax
+    q = jnp.clip(q, -maxv, maxv)
+    return q.astype(x.dtype)

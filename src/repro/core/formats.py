@@ -1,0 +1,90 @@
+"""HBFP format configuration.
+
+The paper's design space (§6): mantissa width m ∈ {4, 8, 12, 16}, tile size
+T ∈ {none, 24, 64}, wide weight storage (16-bit) vs narrow. The recommended
+sweet spot is hbfp8_16 / hbfp12_16 with tile 24 on their FPGA; on TPU we default
+to tile 128 (MXU alignment) — the design-space benchmark reproduces the paper's
+tile-size accuracy trend so both are available.
+
+`HBFPConfig` is a frozen pytree-static dataclass threaded through every HBFP op.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+Rounding = Literal["nearest", "stochastic"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HBFPConfig:
+    """Configuration of the hybrid block-floating-point scheme.
+
+    Attributes:
+      mantissa_bits: signed mantissa width (incl. sign) for compute-path BFP
+        tensors (activations, narrow weights, gradients). Paper: 8 or 12.
+      wide_mantissa_bits: mantissa width for long-lasting weight storage
+        (paper §4.2 "wide weight storage"). Updates read/write this copy;
+        fwd/bwd read the narrow copy. Paper: 16.
+      tile: exponent-sharing tile edge for 2-D weight tiles and the activation
+        feature dimension. None ⇒ one exponent per tensor row-block (the
+        paper's "without tiles" variant). Paper: 24; TPU default: 128.
+      act_block: exponent granularity for activations/gradients along the
+        feature axis. None ⇒ one exponent per training input (paper §5.1);
+        an int ⇒ additionally tile the feature axis (finer, beyond-paper).
+      rounding: mantissa rounding during FP→BFP ("stochastic" per paper §5.3,
+        "nearest" for deterministic tests).
+      quantize_attention: also run attention QK^T / PV contractions in BFP
+        (beyond-paper; attention postdates the paper — on by default since
+        they are dot products, the category HBFP targets).
+      quantize_lm_head: run the final vocab projection in BFP. The paper
+        quantizes all linear layers (unlike DoReFa which must skip first/last);
+        keep True for faithfulness.
+      compute_dtype: dtype of the FP ("hybrid") side on device. f32 for
+        CPU simulation fidelity; bf16 on TPU.
+      stochastic_seed: base seed folded into per-call xorshift/threefry streams.
+      requantize_weights: if False, hbfp_matmul trusts that "weight"-kind
+        operands were already narrowed (by the optimizer shell / serving
+        loader) and skips the in-graph re-quantization — a numeric no-op
+        (BFP idempotence, tested) that removes L× redundant quantize work
+        from the compiled step. Train/serve steps set this; standalone ops
+        keep the safe default True.
+    """
+
+    mantissa_bits: int = 8
+    wide_mantissa_bits: int = 16
+    tile: Optional[int] = 128
+    act_block: Optional[int] = None
+    rounding: Rounding = "nearest"
+    quantize_attention: bool = True
+    quantize_lm_head: bool = True
+    compute_dtype: str = "float32"
+    stochastic_seed: int = 0x5EED
+    requantize_weights: bool = True
+
+    def __post_init__(self):
+        if not (2 <= self.mantissa_bits <= 24):
+            raise ValueError(f"mantissa_bits out of range: {self.mantissa_bits}")
+        if self.wide_mantissa_bits < self.mantissa_bits:
+            raise ValueError("wide storage must be at least as wide as compute")
+        if self.tile is not None and self.tile < 1:
+            raise ValueError(f"tile must be positive, got {self.tile}")
+
+    # -- paper-style names ------------------------------------------------
+    @property
+    def name(self) -> str:
+        """Paper nomenclature: hbfp<m>_<wide> (tile t)."""
+        t = "none" if self.tile is None else str(self.tile)
+        return f"hbfp{self.mantissa_bits}_{self.wide_mantissa_bits}_t{t}"
+
+    def with_(self, **kw) -> "HBFPConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Paper's recommended configurations (§6 "sweet spot").
+HBFP8_16 = HBFPConfig(mantissa_bits=8, wide_mantissa_bits=16)
+HBFP12_16 = HBFPConfig(mantissa_bits=12, wide_mantissa_bits=16)
+# Paper-fidelity variant (FPGA tile size).
+HBFP8_16_T24 = HBFPConfig(mantissa_bits=8, wide_mantissa_bits=16, tile=24)
+# FP32 baseline sentinel: HBFP disabled entirely.
+FP32 = None

@@ -1,0 +1,170 @@
+"""HBFP dot-product ops with custom VJP.
+
+The paper (§4.1/§5.1): *all* dot products — forward, backward-data, and
+backward-weight (an outer-product accumulation over training inputs) — run in
+BFP; everything else stays FP. The GPU simulation quantizes the inputs of each
+dot product and executes the contraction in native FP arithmetic; we replicate
+that exactly (the f32 contraction of BFP mantissa-scaled values matches the
+fixed-point+FP-accumulate hardware bit-for-bit for m ≤ 12, K_tile ≤ 2^(31-2m)).
+
+Semantics for y = x@w (x: [..., M, K], w: [K, N] or [..., K, N]):
+
+    fwd : y  = Qa(x) @ Qw(w)           Qa = per-input(-row) exponents (§5.1)
+    bwd : dx = Qa(g) @ Qw(w)^T         Qw = square-tile exponents    (§4.2)
+          dw = Qa(x)^T @ Qa(g)         (per-input outer products, FP-accum)
+
+Gradients flow straight through the quantizers (the paper differentiates the
+quantized graph, not Q itself). Weight re-quantization is idempotent, so
+passing weights already narrowed by the optimizer shell is a numeric no-op.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bfp
+from repro.core.formats import HBFPConfig
+
+
+def _zero_cotangent(x):
+    """float0 cotangent for non-differentiable (integer key) inputs."""
+    return jax.tree.map(
+        lambda k: np.zeros(k.shape, jax.dtypes.float0), x)
+
+
+def _fold(key, i):
+    if key is None:
+        return None
+    return jax.random.fold_in(jax.random.wrap_key_data(key), i)
+
+
+def _q_act(x, cfg: HBFPConfig, key, contract_axis: int):
+    """Quantize an activation/gradient with per-row exponents along the
+    contraction axis (optionally blocked by cfg.act_block)."""
+    tile = [1] * x.ndim
+    tile[contract_axis] = cfg.act_block  # None ⇒ whole axis
+    return bfp.quantize(x, cfg.mantissa_bits, tile, cfg.rounding, key)
+
+
+def _q_w(w, cfg: HBFPConfig, key):
+    return bfp.quantize(w, cfg.mantissa_bits,
+                        bfp.weight_tile_shape(w.ndim, cfg.tile),
+                        cfg.rounding, key)
+
+
+def _q_b(b, cfg: HBFPConfig, key, kind: str):
+    """Quantize the right-hand operand b[..., K, N]."""
+    if kind == "weight":
+        if not cfg.requantize_weights:
+            return b  # already narrowed upstream (idempotent to re-apply)
+        return _q_w(b, cfg, key)
+    return _q_act(b, cfg, key, contract_axis=b.ndim - 2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _hbfp_matmul(cfg: HBFPConfig, w_kind: str, x, w, key):
+    xq = _q_act(x, cfg, _fold(key, 0), contract_axis=x.ndim - 1)
+    wq = _q_b(w, cfg, _fold(key, 1), w_kind)
+    return jnp.matmul(xq, wq)
+
+
+def _fwd(cfg, w_kind, x, w, key):
+    xq = _q_act(x, cfg, _fold(key, 0), contract_axis=x.ndim - 1)
+    wq = _q_b(w, cfg, _fold(key, 1), w_kind)
+    return jnp.matmul(xq, wq), (xq, wq, key)
+
+
+def _bwd(cfg, w_kind, res, g):
+    xq, wq, key = res
+    gq = _q_act(g, cfg, _fold(key, 2), contract_axis=g.ndim - 1)
+    # dx[..., M, K] = Qa(g)[..., M, N] @ Qw(w)^T[..., N, K]
+    dx = jnp.matmul(gq, jnp.swapaxes(wq, -1, -2))
+    # sum over broadcast batch dims of x (GQA-style size-1 dims)
+    for ax in range(dx.ndim - 2):
+        if xq.shape[ax] == 1 and dx.shape[ax] != 1:
+            dx = dx.sum(axis=ax, keepdims=True)
+    # dw: per-input outer products accumulated in FP over the token axis.
+    if wq.ndim == 2:
+        t_x = xq.reshape(-1, xq.shape[-1])
+        t_g = gq.reshape(-1, gq.shape[-1])
+        dw = jnp.matmul(t_x.T, t_g)
+    else:
+        dw = jnp.matmul(jnp.swapaxes(xq, -1, -2), gq)
+        # sum over broadcast batch dims if w had size-1 dims
+        for ax in range(dw.ndim - 2):
+            if wq.shape[ax] == 1 and dw.shape[ax] != 1:
+                dw = dw.sum(axis=ax, keepdims=True)
+    dx = dx.astype(xq.dtype)
+    dw = dw.astype(wq.dtype)
+    return dx, dw, _zero_cotangent(key)
+
+
+_hbfp_matmul.defvjp(_fwd, _bwd)
+
+
+def hbfp_matmul(x: jax.Array, w: jax.Array,
+                cfg: Optional[HBFPConfig],
+                key: Optional[jax.Array] = None,
+                w_kind: str = "weight") -> jax.Array:
+    """BFP matmul  y = Q(x) @ Q(w)  with BFP backward passes.
+
+    Args:
+      x: [..., M, K] activations.
+      w: [K, N] shared weight, or [..., K, N] with batch dims matching x
+        (attention / per-expert weights).
+      cfg: HBFPConfig, or None ⇒ plain FP matmul (the fp32 baseline).
+      key: PRNG key for stochastic rounding (required iff cfg.rounding ==
+        "stochastic"). Folded per-operand internally.
+      w_kind: "weight" ⇒ square-tile exponents (paper §4.2); "act" ⇒ the rhs
+        is itself an activation (attention K/V) and gets contraction-aligned
+        per-vector exponents.
+    """
+    if cfg is None:
+        return jnp.matmul(x, w)
+    if w.ndim != 2 and w.ndim != x.ndim:
+        raise ValueError(f"rank mismatch: x {x.shape} vs w {w.shape}")
+    kd = None if key is None else jax.random.key_data(key)
+    if cfg.rounding == "stochastic" and kd is None:
+        raise ValueError("stochastic rounding requires a key")
+    return _hbfp_matmul(cfg, w_kind, x, w, kd)
+
+
+def hbfp_linear(x, w, b, cfg, key=None):
+    """Linear layer: BFP matmul + FP bias add (bias add is not a dot product)."""
+    y = hbfp_matmul(x, w, cfg, key)
+    if b is not None:
+        y = y + b
+    return y
+
+
+# ----------------------------------------------------------------------------
+# Convolution via im2col — used by the paper-fidelity CNN benchmarks
+# (the paper's models are ResNet/WRN/DenseNet; conv backward passes reduce to
+# the same three BFP matmuls through the im2col view).
+# ----------------------------------------------------------------------------
+
+def hbfp_conv2d(x, w, cfg, key=None, stride: int = 1, padding: str = "SAME"):
+    """NHWC conv, HWIO weights, as im2col + hbfp_matmul.
+
+    Weight tiles follow the paper: "for convolutional layers, we tile the two
+    outer feature-map dimensions of the weight matrices" — the im2col view
+    [kh*kw*cin, cout] makes those the two matrix dims, which is what
+    weight_tile_shape tiles.
+    """
+    kh, kw, cin, cout = w.shape
+    n, h, wd, _ = x.shape
+    pad = ((kh // 2, (kh - 1) // 2), (kw // 2, (kw - 1) // 2)) \
+        if padding == "SAME" else ((0, 0), (0, 0))
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # patches: [n, ho, wo, cin*kh*kw]
+    ho, wo = patches.shape[1], patches.shape[2]
+    cols = patches.reshape(n * ho * wo, -1)
+    wmat = jnp.moveaxis(w, 2, 0).reshape(cin * kh * kw, cout)
+    y = hbfp_matmul(cols, wmat, cfg, key)
+    return y.reshape(n, ho, wo, cout)

@@ -1,0 +1,85 @@
+"""Wide-weight-storage optimizer shell (paper §4.2 + §5.1).
+
+The paper's "shell optimizer": the inner optimizer's update is computed in
+FP32; the resulting weights are converted to *two* BFP formats — a wide-
+mantissa copy (default 16 b) that persists as training state and is read by
+future updates, and a narrow copy (8/12 b) used by forward/backward passes.
+
+Here the persistent `params` pytree *is* the wide-BFP copy (so checkpoints
+hold the paper's compact weights), and `narrow_params` derives the compute
+copy inside the train step. Non-dot-product parameters (biases, norm scales,
+embeddings, routers) stay in FP — the hybrid in HBFP.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp
+from repro.core.formats import HBFPConfig
+
+# Parameter-name fragments excluded from BFP (not dot-product weights, or
+# range-sensitive per DESIGN.md §5: embedding gathers, router softmax).
+FP_NAME_FRAGMENTS = ("embed", "router", "bias", "scale", "norm", "gate_bias",
+                     "a_log", "dt_bias", "conv")
+
+
+def is_hbfp_weight(path: str, leaf) -> bool:
+    """True if this parameter participates in BFP dot products."""
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    lname = path.lower()
+    return not any(f in lname for f in FP_NAME_FRAGMENTS)
+
+
+def _named_map(fn: Callable[[str, Any], Any], tree):
+    def visit(p, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in p)
+        return fn(name, leaf)
+    return jax.tree_util.tree_map_with_path(visit, tree)
+
+
+def narrow_params(params, cfg: Optional[HBFPConfig],
+                  key: Optional[jax.Array] = None):
+    """Derive the narrow-mantissa compute copy used by fwd/bwd (paper §5.1)."""
+    if cfg is None:
+        return params
+
+    def q(name, leaf):
+        if not is_hbfp_weight(name, leaf):
+            return leaf
+        k = None
+        if key is not None and cfg.rounding == "stochastic":
+            k = jax.random.fold_in(key, hash(name) & 0x7FFFFFFF)
+        return bfp.quantize_weight(leaf, cfg, k, wide=False)
+
+    return _named_map(q, params)
+
+
+def widen_params(params, cfg: Optional[HBFPConfig],
+                 key: Optional[jax.Array] = None):
+    """Round freshly-updated weights into the wide-BFP storage format."""
+    if cfg is None:
+        return params
+
+    def q(name, leaf):
+        if not is_hbfp_weight(name, leaf):
+            return leaf
+        k = None
+        if key is not None and cfg.rounding == "stochastic":
+            k = jax.random.fold_in(key, hash(name) & 0x7FFFFFFF)
+        return bfp.quantize_weight(leaf, cfg, k, wide=True)
+
+    return _named_map(q, params)
+
+
+def hbfp_apply_updates(params, updates, cfg: Optional[HBFPConfig],
+                       key: Optional[jax.Array] = None):
+    """params ← Q_wide(params + updates): FP32 update, wide-BFP storage."""
+    new = jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                     + u.astype(jnp.float32)).astype(p.dtype),
+                       params, updates)
+    return widen_params(new, cfg, key)

@@ -1,0 +1,98 @@
+"""Deterministic, shardable, resumable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step) via threefry — so restarts
+resume bit-exactly from the checkpointed step with no pipeline state to
+save, and any host can materialize its own shard (multi-host friendly).
+
+Two generators:
+  * "uniform": i.i.d. tokens — for dry-runs/shape tests.
+  * "markov": tokens from a fixed random bigram chain — has learnable
+    structure, so training losses actually fall (used by the convergence
+    benchmarks, the stand-in for the paper's CIFAR/PTB tasks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+class SyntheticLM:
+    def __init__(self, vocab_size: int, seq_len: int, global_batch: int,
+                 seed: int = 0, kind: str = "markov",
+                 chain_vocab: Optional[int] = None):
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.seed = seed
+        self.kind = kind
+        # bigram transition "sparsity": each token has 4 likely successors
+        cv = chain_vocab or min(vocab_size, 1024)
+        self.chain_vocab = cv
+        key = jax.random.key(seed ^ 0xDA7A)
+        self._succ = jax.random.randint(key, (cv, 4), 0, cv)
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def _markov(self, key):
+        B, S, cv = self.global_batch, self.seq_len, self.chain_vocab
+        k0, k1, k2 = jax.random.split(key, 3)
+        start = jax.random.randint(k0, (B,), 0, cv)
+        choices = jax.random.randint(k1, (B, S), 0, 4)
+        noise = jax.random.bernoulli(k2, 0.05, (B, S))
+        nkey = jax.random.split(k2, 1)[0]
+        rand_tok = jax.random.randint(nkey, (B, S), 0, cv)
+
+        def step(tok, xs):
+            c, nz, rt = xs
+            nxt = self._succ[tok, c]
+            nxt = jnp.where(nz, rt, nxt)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(
+            step, start, (choices.T, noise.T, rand_tok.T))
+        return toks.T  # [B, S]
+
+    def tokens(self, step: int) -> jax.Array:
+        key = jax.random.fold_in(jax.random.key(self.seed), step)
+        if self.kind == "markov":
+            return self._markov(key)
+        return jax.random.randint(key, (self.global_batch, self.seq_len),
+                                  0, self.vocab_size)
+
+    def batch(self, step: int) -> dict:
+        """Next-token-prediction batch: inputs t[:-1], labels t[1:]."""
+        t = self.tokens(step)
+        return {"tokens": t[:, :-1], "labels": t[:, 1:]}
+
+
+def batch_for_arch(arch: ArchConfig, batch_size: int, seq_len: int,
+                   step: int = 0, seed: int = 0, kind: str = "uniform"):
+    """Materialize a train batch matching the arch's input kind."""
+    key = jax.random.fold_in(jax.random.key(seed), step)
+    b: dict = {}
+    if arch.input_kind == "embeddings":
+        b["embeds"] = jax.random.normal(
+            key, (batch_size, seq_len, arch.d_model), jnp.float32)
+    elif arch.n_codebooks > 1:
+        b["tokens"] = jax.random.randint(
+            key, (batch_size, seq_len, arch.n_codebooks), 0,
+            arch.vocab_size)
+    elif kind == "markov":
+        pipe = SyntheticLM(arch.vocab_size, seq_len + 1, batch_size, seed)
+        return pipe.batch(step)
+    else:
+        b["tokens"] = jax.random.randint(key, (batch_size, seq_len), 0,
+                                         arch.vocab_size)
+    if arch.n_codebooks > 1:
+        b["labels"] = jax.random.randint(
+            jax.random.fold_in(key, 1),
+            (batch_size, seq_len, arch.n_codebooks), 0, arch.vocab_size)
+    else:
+        b["labels"] = jax.random.randint(
+            jax.random.fold_in(key, 1), (batch_size, seq_len), 0,
+            arch.vocab_size)
+    return b

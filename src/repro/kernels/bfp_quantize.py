@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: FP32 → packed BFP conversion (the paper's "FP-to-BFP
+unit", §5.3: detect the max exponent of the incoming tensor and normalize
+mantissas, with xorshift stochastic rounding during truncation).
+
+TPU adaptation: one grid program converts one VMEM-resident (block_r ×
+block_c) slab; exponent-sharing tiles (tile_r × tile_c) subdivide the slab
+(tile edges aligned to the 8×128 VREG lanes when tile ≥ 128). Outputs packed
+mantissas (int8 for m ≤ 8 else int16) and one int8 exponent per tile — the
+storage format that realizes the paper's 2× model compression and the 4×
+forward/backward bandwidth saving.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import quantize_block
+
+
+def _quantize_kernel(x_ref, seed_ref, mant_ref, exp_ref, *, mantissa_bits,
+                     tile_r, tile_c, stochastic, block_r, block_c, n_cols):
+    x = x_ref[...].astype(jnp.float32)
+    g = x.reshape(block_r // tile_r, tile_r, block_c // tile_c, tile_c)
+    amax = jnp.abs(g).max(axis=(1, 3), keepdims=True)
+
+    idx = None
+    seed = None
+    if stochastic:
+        i, j = pl.program_id(0), pl.program_id(1)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (block_r, block_c), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (block_r, block_c), 1)
+        gidx = (i * block_r + rows) * n_cols + (j * block_c + cols)
+        idx = gidx.reshape(g.shape)
+        seed = seed_ref[0, 0]
+
+    q, delta = quantize_block(g, mantissa_bits, amax,
+                              stochastic=stochastic, seed=seed, idx=idx)
+    mdt = jnp.int8 if mantissa_bits <= 8 else jnp.int16
+    mant_ref[...] = q.reshape(block_r, block_c).astype(mdt)
+    dbits = jax.lax.bitcast_convert_type(delta, jnp.int32)
+    e = ((dbits >> 23) & 0xFF) - 127 + (mantissa_bits - 2)
+    exp_ref[...] = e[:, 0, :, 0].astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("mantissa_bits", "tile_r",
+                                             "tile_c", "stochastic",
+                                             "block_r", "block_c",
+                                             "interpret"))
+def bfp_quantize_pallas(x, seed, *, mantissa_bits: int = 8,
+                        tile_r: int = 128, tile_c: int = 128,
+                        stochastic: bool = False,
+                        block_r: int = 256, block_c: int = 512,
+                        interpret: bool = False):
+    """Pack a 2-D f32 array into BFP (mantissa, per-tile exponent).
+
+    x: [R, C] with R % tile_r == 0 and C % tile_c == 0 (ops.py pads).
+    seed: int32 scalar array (stochastic rounding stream id).
+    Returns (mantissa [R, C] int8/int16, exponent [R/tile_r, C/tile_c] int8).
+    """
+    R, C = x.shape
+    block_r = min(block_r, R)
+    block_c = min(block_c, C)
+    # blocks must contain whole tiles
+    block_r = max((block_r // tile_r) * tile_r, min(tile_r, R))
+    block_c = max((block_c // tile_c) * tile_c, min(tile_c, C))
+    if R % block_r or C % block_c:
+        raise ValueError(f"shape {x.shape} not divisible by block "
+                         f"({block_r},{block_c})")
+    tr, tc = min(tile_r, R), min(tile_c, C)
+    mdt = jnp.int8 if mantissa_bits <= 8 else jnp.int16
+    grid = (R // block_r, C // block_c)
+    kernel = functools.partial(
+        _quantize_kernel, mantissa_bits=mantissa_bits, tile_r=tr, tile_c=tc,
+        stochastic=stochastic, block_r=block_r, block_c=block_c, n_cols=C)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # seed scalar
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((block_r // tr, block_c // tc), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), mdt),
+            jax.ShapeDtypeStruct((R // tr, C // tc), jnp.int8),
+        ],
+        interpret=interpret,
+    )(x, seed)

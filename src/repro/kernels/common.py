@@ -1,0 +1,62 @@
+"""Shared kernel helpers: exponent extraction and the paper's xorshift RNG.
+
+These are written in plain jnp so the Pallas kernel bodies and the ref.py
+oracles share the *same* code — nearest-rounding results are bit-exact between
+kernel and oracle, and stochastic-rounding results are too (same counter-based
+xorshift stream).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EXP_FLOOR = -100
+EXP_CEIL = 126
+
+
+def max_exponent(amax: jax.Array) -> jax.Array:
+    """floor(log2 amax) by f32 bit-field extraction (kernel-safe)."""
+    bits = jax.lax.bitcast_convert_type(amax.astype(jnp.float32), jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    return jnp.clip(e, EXP_FLOOR, EXP_CEIL)
+
+
+def xorshift32(x: jax.Array) -> jax.Array:
+    """One round of Marsaglia xorshift32 (paper §5.3 uses this RNG for
+    stochastic rounding: 'three constant shifts and three xor operations')."""
+    x = x ^ (x << 13)
+    x = x ^ ((x >> 17) & 0x7FFF)  # logical shift on int32
+    x = x ^ (x << 5)
+    return x
+
+
+def uniform_from_index(seed: jax.Array, idx: jax.Array) -> jax.Array:
+    """Counter-based U[0,1) stream: hash (seed, element-index) through two
+    xorshift rounds. idx must be int32 and unique per element."""
+    golden = jnp.int32(-1640531527)  # 0x9E3779B9 as two's-complement int32
+    s = (idx * golden) ^ seed.astype(jnp.int32)
+    s = xorshift32(xorshift32(s | jnp.int32(1)))
+    # take 24 high-ish bits -> [0, 1)
+    u = ((s >> 7) & 0x00FFFFFF).astype(jnp.float32) * (1.0 / 16777216.0)
+    return u
+
+
+def pow2(e):
+    """Exact 2^e via IEEE-754 bit construction (see core.bfp.pow2)."""
+    bits = (e.astype(jnp.int32) + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def quantize_block(x, mantissa_bits: int, amax, *, stochastic: bool,
+                   seed=None, idx=None):
+    """Quantize x against per-element broadcastable amax. Returns (q, delta)
+    with q integral-valued f32 (castable to int8/int16) and delta the step."""
+    e = max_exponent(amax)
+    delta = pow2(e - mantissa_bits + 2)
+    v = x.astype(jnp.float32) / delta
+    if stochastic:
+        v = jnp.floor(v + uniform_from_index(seed, idx))
+    else:
+        v = jnp.rint(v)
+    lim = float(2 ** (mantissa_bits - 1) - 1)
+    return jnp.clip(v, -lim, lim), delta

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: fused HBFP flash attention (beyond-paper).
+
+The paper fuses FP→BFP conversion into the MatMul unit so "conversions are
+infrequent and account for an insignificant fraction of area" (§2). The same
+insight applied to attention: QK^T and PV are dot products ⇒ BFP; softmax is
+range-sensitive ⇒ FP32 — all inside one VMEM-resident flash kernel, so the
+[S×S] score matrix never touches HBM (the memory-roofline fix identified in
+EXPERIMENTS.md §Roofline for the prefill cells).
+
+Per (q-block, k-block) step:
+  1. quantize q rows / k rows to 8-bit BFP (exponent per vector — matching
+     models/attention.py's w_kind="act" semantics),
+  2. int8 MXU dot → int32 → rescale by δq·δk,
+  3. online-softmax update (m, l running max/sum, f32 — the "FP side"),
+  4. quantize probs per row, PV int8 dot, rescale, accumulate f32.
+
+Causal masking by absolute position; fully-masked k-blocks short-circuit.
+Oracle: ref.hbfp_flash_attn_ref (bit-exact, shared quantize_block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import quantize_block
+
+NEG_INF = -1e30
+
+
+def _qdot(a, b, m_bits):
+    """BFP dot: int8 path for m<=8, exact-f32 otherwise. a:[M,K] b:[K,N]."""
+    if m_bits <= 8:
+        return jax.lax.dot_general(
+            a.astype(jnp.int8), b.astype(jnp.int8), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+    return jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  m_bits, bq, bk, hd, n_k, scale, causal):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qb = pl.program_id(1)
+    run = (not causal) or (kb * bk <= qb * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale        # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)                # [bk, hd]
+        # BFP: one exponent per q-row / k-row over hd (act semantics)
+        qq, dq = quantize_block(q, m_bits, jnp.abs(q).max(1, keepdims=True),
+                                stochastic=False)
+        kq, dk = quantize_block(k, m_bits, jnp.abs(k).max(1, keepdims=True),
+                                stochastic=False)
+        s = _qdot(qq, kq.T, m_bits) * (dq * dk.T)       # [bq, bk] f32
+        if causal:
+            qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 0)
+            kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        # online softmax (FP side)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                          # [bq, bk]
+        l_ref[...] = l_ref[...] * alpha + p.sum(1, keepdims=True)
+        # PV in BFP: probs per row over bk, v per column over bk
+        pq, dp = quantize_block(p, m_bits, jnp.abs(p).max(1, keepdims=True),
+                                stochastic=False)
+        vq, dv = quantize_block(v, m_bits,
+                                jnp.abs(v).max(0, keepdims=True),
+                                stochastic=False)
+        pv = _qdot(pq, vq, m_bits) * (dp * dv)          # [bq, hd]
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m_bits", "bq", "bk", "causal",
+                                             "interpret"))
+def hbfp_flash_attention(q, k, v, *, m_bits: int = 8, bq: int = 128,
+                         bk: int = 128, causal: bool = True,
+                         interpret: bool = False):
+    """q,k,v: [BH, S, hd] (flattened batch×heads). Returns [BH, S, hd]."""
+    BH, S, hd = q.shape
+    bq, bk = min(bq, S), min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    n_k = S // bk
+    scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(_flash_kernel, m_bits=m_bits, bq=bq, bk=bk,
+                               hd=hd, n_k=n_k, scale=scale, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, S // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,60 @@
+"""Jit'd public wrappers around the Pallas kernels: padding to block
+multiples, batching, and CPU (interpret) / TPU dispatch.
+
+On this container (CPU) the kernels always run with interpret=True; on TPU
+the same call sites compile to Mosaic. `INTERPRET` flips automatically.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bfp_quantize import bfp_quantize_pallas
+from repro.kernels.hbfp_matmul import hbfp_matmul_pallas
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mults):
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads), True
+    return x, False
+
+
+def bfp_quantize(x, seed=0, *, mantissa_bits=8, tile=128, stochastic=False):
+    """Quantize a 2-D array to packed BFP via the Pallas conversion kernel.
+
+    Returns (mantissa, per-tile exponent, padded_shape). Rows/cols are padded
+    to the tile size; callers slice with the original shape.
+    """
+    assert x.ndim == 2
+    xp, _ = _pad_to(x, (tile, tile))
+    seed = jnp.full((1, 1), seed, jnp.int32)
+    m, e = bfp_quantize_pallas(xp, seed, mantissa_bits=mantissa_bits,
+                               tile_r=tile, tile_c=tile,
+                               stochastic=stochastic, interpret=INTERPRET)
+    return m, e, xp.shape
+
+
+def hbfp_matmul(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
+                bm=128, bk=128, bn=128):
+    """Fused HBFP matmul for [..., M, K] @ [K, N] (leading dims flattened).
+
+    Pads every dim to the block size (zero rows/cols quantize to zero and
+    contribute nothing), calls the kernel, slices back.
+    """
+    lead = x.shape[:-2] if x.ndim > 2 else ()
+    M0, K0 = x.shape[-2], x.shape[-1]
+    N0 = w.shape[-1]
+    x2 = x.reshape(-1, K0)
+    xp, _ = _pad_to(x2, (bm, bk))
+    wp, _ = _pad_to(w, (bk, bn))
+    seed_arr = None if seed is None else jnp.full((1, 1), seed, jnp.int32)
+    y = hbfp_matmul_pallas(xp, wp, seed_arr, mantissa_bits=mantissa_bits,
+                           stochastic=stochastic, bm=bm, bk=bk, bn=bn,
+                           interpret=INTERPRET)
+    y = y[:x2.shape[0], :N0]
+    return y.reshape(*lead, M0, N0)

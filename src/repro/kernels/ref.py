@@ -1,0 +1,143 @@
+"""Pure-jnp oracles mirroring the Pallas kernels' exact semantics.
+
+Both oracles share `kernels.common.quantize_block` with the kernel bodies, so
+nearest-rounding results are bit-exact and stochastic-rounding results use the
+identical counter-based xorshift stream — tests assert exact equality.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import quantize_block
+
+
+def bfp_quantize_ref(x, seed, *, mantissa_bits=8, tile_r=128, tile_c=128,
+                     stochastic=False):
+    """Oracle for bfp_quantize_pallas. Returns (mantissa, exponent)."""
+    R, C = x.shape
+    tr, tc = min(tile_r, R), min(tile_c, C)
+    g = x.astype(jnp.float32).reshape(R // tr, tr, C // tc, tc)
+    amax = jnp.abs(g).max(axis=(1, 3), keepdims=True)
+    idx = None
+    if stochastic:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (R, C), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (R, C), 1)
+        idx = (rows * C + cols).reshape(g.shape)
+    q, delta = quantize_block(g, mantissa_bits, amax, stochastic=stochastic,
+                              seed=jnp.asarray(seed).reshape(-1)[0], idx=idx)
+    mdt = jnp.int8 if mantissa_bits <= 8 else jnp.int16
+    dbits = jax.lax.bitcast_convert_type(delta, jnp.int32)
+    e = ((dbits >> 23) & 0xFF) - 127 + (mantissa_bits - 2)
+    return (q.reshape(R, C).astype(mdt),
+            e[:, 0, :, 0].astype(jnp.int8))
+
+
+def hbfp_matmul_ref(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
+                    bm=128, bk=128, bn=128, out_dtype=jnp.float32):
+    """Oracle for hbfp_matmul_pallas: per-(row, K-block) activation exponents,
+    per-(bk, bn)-tile weight exponents, f32 accumulation across K blocks."""
+    M, K = x.shape
+    _, N = w.shape
+    bm_, bk_, bn_ = min(bm, M), min(bk, K), min(bn, N)
+    seed_v = jnp.zeros((), jnp.int32) if seed is None \
+        else jnp.asarray(seed).reshape(-1)[0]
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+
+    acc = jnp.zeros((M, N), jnp.float32)
+    for kk in range(K // bk_):
+        xs = xf[:, kk * bk_:(kk + 1) * bk_]                      # [M, bk]
+        ax = jnp.abs(xs).max(axis=1, keepdims=True)
+        idx_x = None
+        if stochastic:
+            r = jax.lax.broadcasted_iota(jnp.int32, (M, bk_), 0)
+            c = jax.lax.broadcasted_iota(jnp.int32, (M, bk_), 1)
+            idx_x = r * K + (kk * bk_ + c)
+        qx, dx = quantize_block(xs, mantissa_bits, ax, stochastic=stochastic,
+                                seed=seed_v, idx=idx_x)
+        for jj in range(N // bn_):
+            ws = wf[kk * bk_:(kk + 1) * bk_, jj * bn_:(jj + 1) * bn_]
+            aw = jnp.abs(ws).max()
+            idx_w = None
+            if stochastic:
+                rw = jax.lax.broadcasted_iota(jnp.int32, (bk_, bn_), 0)
+                cw = jax.lax.broadcasted_iota(jnp.int32, (bk_, bn_), 1)
+                idx_w = ((kk * bk_ + rw) * N + (jj * bn_ + cw)
+                         + jnp.int32(0x40000000))
+            qw, dw = quantize_block(ws, mantissa_bits, aw,
+                                    stochastic=stochastic, seed=seed_v,
+                                    idx=idx_w)
+            if mantissa_bits <= 8:
+                part = jax.lax.dot_general(
+                    qx.astype(jnp.int8), qw.astype(jnp.int8),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32).astype(jnp.float32)
+            else:
+                part = jax.lax.dot_general(
+                    qx, qw, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            acc = acc.at[:, jj * bn_:(jj + 1) * bn_].add(part * (dx * dw))
+    return acc.astype(out_dtype)
+
+
+def hbfp_flash_attn_ref(q, k, v, *, m_bits=8, bq=128, bk=128, causal=True):
+    """Oracle for hbfp_flash_attention: same per-block BFP quantization,
+    same online-softmax order of operations (bit-exact in f32)."""
+    BH, S, hd = q.shape
+    bq_, bk_ = min(bq, S), min(bk, S)
+    scale = 1.0 / (hd ** 0.5)
+    out = jnp.zeros_like(q, jnp.float32)
+    for b in range(BH):
+        for i in range(S // bq_):
+            qs = q[b, i * bq_:(i + 1) * bq_].astype(jnp.float32) * scale
+            qq, dq = quantize_block(qs, m_bits,
+                                    jnp.abs(qs).max(1, keepdims=True),
+                                    stochastic=False)
+            m = jnp.full((bq_, 1), -1e30, jnp.float32)
+            l = jnp.zeros((bq_, 1), jnp.float32)
+            acc = jnp.zeros((bq_, hd), jnp.float32)
+            for j in range(S // bk_):
+                if causal and j * bk_ > i * bq_ + bq_ - 1:
+                    continue
+                ks = k[b, j * bk_:(j + 1) * bk_].astype(jnp.float32)
+                vs = v[b, j * bk_:(j + 1) * bk_].astype(jnp.float32)
+                kq, dk = quantize_block(ks, m_bits,
+                                        jnp.abs(ks).max(1, keepdims=True),
+                                        stochastic=False)
+                if m_bits <= 8:
+                    s = jax.lax.dot_general(
+                        qq.astype(jnp.int8), kq.T.astype(jnp.int8),
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.int32
+                    ).astype(jnp.float32) * (dq * dk.T)
+                else:
+                    s = (qq @ kq.T) * (dq * dk.T)
+                if causal:
+                    qpos = i * bq_ + jnp.arange(bq_)[:, None]
+                    kpos = j * bk_ + jnp.arange(bk_)[None, :]
+                    s = jnp.where(kpos <= qpos, s, -1e30)
+                m_new = jnp.maximum(m, s.max(1, keepdims=True))
+                alpha = jnp.exp(m - m_new)
+                p = jnp.exp(s - m_new)
+                l = l * alpha + p.sum(1, keepdims=True)
+                pq, dp = quantize_block(p, m_bits,
+                                        jnp.abs(p).max(1, keepdims=True),
+                                        stochastic=False)
+                vq, dv = quantize_block(vs, m_bits,
+                                        jnp.abs(vs).max(0, keepdims=True),
+                                        stochastic=False)
+                if m_bits <= 8:
+                    pv = jax.lax.dot_general(
+                        pq.astype(jnp.int8), vq.astype(jnp.int8),
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.int32
+                    ).astype(jnp.float32) * (dp * dv)
+                else:
+                    pv = (pq @ vq) * (dp * dv)
+                acc = acc * alpha + pv
+                m = m_new
+            out = out.at[b, i * bq_:(i + 1) * bq_].set(
+                acc / jnp.maximum(l, 1e-30))
+    return out.astype(q.dtype)

@@ -1,0 +1,32 @@
+"""Production mesh definitions (TPU v5e).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. Single pod: 16×16 = 256 chips (data, model). Multi-pod: 2 pods ×
+256 = 512 chips (pod, data, model) — the pod axis is an extra pure-DP axis
+(gradient all-reduce crosses the inter-pod DCN/ICI links).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run "
+            "under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "(launch/dryrun.py sets this automatically)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:data * model])

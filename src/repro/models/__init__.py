@@ -1,0 +1,3 @@
+from repro.models.layers import Ctx
+from repro.models.transformer import (decode_step, forward, init_params,
+                                      loss_fn, make_cache, prefill)

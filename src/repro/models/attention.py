@@ -1,0 +1,207 @@
+"""GQA attention with RoPE/M-RoPE, sliding windows, logit soft-capping,
+KV caches (full and ring-buffer), and a q-chunked memory-efficient path.
+
+HBFP: the QK^T and PV contractions are dot products, so they run in BFP when
+cfg.quantize_attention (the paper predates attention blocks; DESIGN.md §2
+marks this as the natural extension of "all dot products in BFP").
+Softmax/masking/rotary stay FP.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hbfp_ops import hbfp_matmul
+from repro.models.layers import apply_mrope, apply_rope, softcap
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, Hkv, C, hd] (bf16/f32, or int8 BFP mantissas)
+    v: jax.Array          # [B, Hkv, C, hd]
+    slot_pos: jax.Array   # [B, C] absolute position per slot (-1 = empty)
+    k_exp: Optional[jax.Array] = None   # int8 [B, Hkv, C] (BFP cache mode)
+    v_exp: Optional[jax.Array] = None
+
+
+def _acfg(ctx):
+    cfg = ctx.cfg
+    return cfg if (cfg is not None and cfg.quantize_attention) else None
+
+
+# --- BFP KV cache (beyond-paper, DESIGN.md §2): K/V vectors stored as 8-bit
+# BFP — one exponent per (position, head) vector — halving decode cache
+# reads vs bf16 (4x vs f32). Dequantization is exact BFP; attention quality
+# matches hbfp8 activations (tests/test_models.py::test_bfp_kv_cache). ---
+
+_KV_M = 8  # mantissa bits
+
+
+def quantize_kv_vec(x):
+    """x: [..., hd] -> (int8 mantissas [..., hd], int8 exponent [...])."""
+    from repro.kernels.common import max_exponent, pow2
+    amax = jnp.abs(x.astype(jnp.float32)).max(-1, keepdims=True)
+    e = max_exponent(amax)
+    q = jnp.clip(jnp.rint(x.astype(jnp.float32) / pow2(e - _KV_M + 2)),
+                 -127, 127)
+    return q.astype(jnp.int8), e.squeeze(-1).astype(jnp.int8)
+
+
+def dequantize_kv(q, e, dtype):
+    from repro.kernels.common import pow2
+    scale = pow2(e.astype(jnp.int32) - _KV_M + 2)
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _attend_block(qb, k, v, qpos, kpos, ctx, cap, window):
+    """One query block against all kv. qb: [B,Hkv,G,C,hd]; k,v:
+    [B,Hkv,S,hd]; qpos: [C] or [B,C]; kpos: [B,S]. Returns [B,Hkv,G,C,hd]."""
+    acfg = _acfg(ctx)
+    kt = jnp.swapaxes(k, -1, -2)[:, :, None]            # [B,Hkv,1,hd,S]
+    scores = hbfp_matmul(qb, kt, acfg, ctx.key_for("qk"), w_kind="act")
+    scores = scores.astype(jnp.float32)
+    scores = softcap(scores, cap)
+    if qpos.ndim == 1:
+        qp = qpos[None, :, None]                         # [1,C,1]
+        kp = kpos[:, None, :]                            # [B,1,S]
+    else:
+        qp = qpos[:, :, None]
+        kp = kpos[:, None, :]
+    mask = (kp <= qp) & (kp >= 0)
+    if window is not None:
+        mask &= kp > qp - window
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qb.dtype)
+    out = hbfp_matmul(probs, v[:, :, None], acfg, ctx.key_for("pv"),
+                      w_kind="act")
+    return out
+
+
+def mha(q, k, v, qpos, kpos, ctx, *, cap=None, window=None,
+        q_chunk: Optional[int] = None):
+    """q: [B,H,Sq,hd]; k,v: [B,Hkv,Skv,hd]. Causal + optional window.
+
+    q_chunk: if set and Sq > q_chunk, scan over query chunks with a remat'd
+    body (memory O(Sq·Skv/n_chunks) instead of O(Sq·Skv))."""
+    B, H, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    qs = (q * scale).reshape(B, Hkv, G, Sq, hd)
+
+    if q_chunk is None or Sq <= q_chunk or Sq % q_chunk != 0:
+        out = _attend_block(qs, k, v, qpos, kpos, ctx, cap, window)
+        return out.reshape(B, H, Sq, hd)
+
+    nc = Sq // q_chunk
+    qs_c = jnp.moveaxis(qs.reshape(B, Hkv, G, nc, q_chunk, hd), 3, 0)
+    if qpos.ndim == 1:
+        qpos_c = qpos.reshape(nc, q_chunk)
+    else:
+        qpos_c = jnp.moveaxis(qpos.reshape(B, nc, q_chunk), 1, 0)
+
+    body = jax.checkpoint(
+        lambda qb, qp: _attend_block(qb, k, v, qp, kpos, ctx, cap, window))
+
+    def step(_, xs):
+        qb, qp = xs
+        return None, body(qb, qp)
+
+    _, out = jax.lax.scan(step, None, (qs_c, qpos_c))
+    out = jnp.moveaxis(out, 0, 3)                        # [B,Hkv,G,nc,C,hd]
+    return out.reshape(B, H, Sq, hd)
+
+
+# ----------------------------------------------------------------------------
+# Full attention layer (projections + rotary + cache management)
+# ----------------------------------------------------------------------------
+
+def attention_layer(x, p, ctx, *, n_heads, n_kv_heads, head_dim,
+                    positions, rope_theta=10000.0, mrope=False,
+                    window=None, attn_cap=None, q_chunk=512,
+                    cache: Optional[KVCache] = None,
+                    return_cache: bool = False,
+                    bfp_cache: bool = False):
+    """x: [B,S,D]. positions: [B,S] (or [3,B,S] for mrope).
+
+    Training/prefill: cache is None; attends causally within x.
+    Decode: cache given; S == 1; appends to cache (ring-buffer if the cache
+    is smaller than the context) and attends over it.
+    """
+    B, S, D = x.shape
+    q = hbfp_matmul(x, p["attn_wq"], ctx.cfg, ctx.key_for("wq"))
+    k = hbfp_matmul(x, p["attn_wk"], ctx.cfg, ctx.key_for("wk"))
+    v = hbfp_matmul(x, p["attn_wv"], ctx.cfg, ctx.key_for("wv"))
+    q = q.reshape(B, S, n_heads, head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, n_kv_heads, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, n_kv_heads, head_dim).transpose(0, 2, 1, 3)
+
+    rot = functools.partial(apply_mrope, theta=rope_theta) if mrope \
+        else functools.partial(apply_rope, theta=rope_theta)
+    q = rot(q, positions)
+    k = rot(k, positions)
+
+    tok_pos = positions[0] if mrope else positions       # [B,S] absolute
+
+    if cache is None:
+        qpos = tok_pos if tok_pos.ndim == 2 else tok_pos
+        out = mha(q, k, v, qpos, tok_pos, ctx, cap=attn_cap, window=window,
+                  q_chunk=q_chunk)
+        new_cache = None
+        if return_cache:
+            if bfp_cache:
+                kq, ke = quantize_kv_vec(k)
+                vq, ve = quantize_kv_vec(v)
+                new_cache = KVCache(kq, vq, tok_pos, ke, ve)
+            else:
+                new_cache = KVCache(k=k, v=v, slot_pos=tok_pos)
+    else:
+        # decode: S == 1; write into ring slot pos % C
+        C = cache.k.shape[2]
+        pos = tok_pos[:, 0]                              # [B]
+        slot = pos % C
+        bidx = jnp.arange(B)
+        if bfp_cache:
+            kq, ke = quantize_kv_vec(k[:, :, 0])
+            vq, ve = quantize_kv_vec(v[:, :, 0])
+            nk = cache.k.at[bidx, :, slot].set(kq)
+            nv = cache.v.at[bidx, :, slot].set(vq)
+            nke = cache.k_exp.at[bidx, :, slot].set(ke)
+            nve = cache.v_exp.at[bidx, :, slot].set(ve)
+            npos = cache.slot_pos.at[bidx, slot].set(pos)
+            new_cache = KVCache(nk, nv, npos, nke, nve)
+            kd = dequantize_kv(nk, nke, x.dtype)
+            vd = dequantize_kv(nv, nve, x.dtype)
+        else:
+            nk = cache.k.at[bidx, :, slot].set(k[:, :, 0])
+            nv = cache.v.at[bidx, :, slot].set(v[:, :, 0])
+            npos = cache.slot_pos.at[bidx, slot].set(pos)
+            new_cache = KVCache(nk, nv, npos)
+            kd, vd = nk, nv
+        out = mha(q, kd, vd, tok_pos, npos, ctx, cap=attn_cap, window=window,
+                  q_chunk=None)
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, n_heads * head_dim)
+    out = hbfp_matmul(out, p["attn_wo"], ctx.cfg, ctx.key_for("wo"))
+    return out, new_cache
+
+
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim,
+                   dtype=jnp.float32, out_scale=None):
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    so = (n_heads * head_dim) ** -0.5 if out_scale is None else out_scale
+    return {
+        "attn_wq": jax.random.normal(ks[0], (d_model, n_heads * head_dim),
+                                     dtype) * s,
+        "attn_wk": jax.random.normal(ks[1], (d_model, n_kv_heads * head_dim),
+                                     dtype) * s,
+        "attn_wv": jax.random.normal(ks[2], (d_model, n_kv_heads * head_dim),
+                                     dtype) * s,
+        "attn_wo": jax.random.normal(ks[3], (n_heads * head_dim, d_model),
+                                     dtype) * so,
+    }

@@ -1,0 +1,140 @@
+"""Shared model layers. Non-dot-product ops (norms, rotary, softcap, gating)
+run in FP per the HBFP rule; dot products route through core.hbfp_ops."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hbfp_ops import hbfp_matmul
+
+
+def rms_norm(x, scale, eps: float = 1e-6, zero_centered: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    s = (1.0 + scale) if zero_centered else scale
+    return (y * s).astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap). FP op."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x.astype(jnp.float32) / cap).astype(x.dtype) \
+        if x.dtype != jnp.float32 else cap * jnp.tanh(x / cap)
+
+
+# ----------------------------------------------------------------------------
+# Rotary embeddings (RoPE and Qwen2-VL M-RoPE)
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: [B, H, S, hd]; positions: [B, S] int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[:, None, :, None].astype(jnp.float32) * inv  # [B,1,S,hd/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float = 1e6,
+                sections=(0.25, 0.375, 0.375)):
+    """Qwen2-VL multimodal RoPE (arXiv:2409.12191 §2.1): the rotary dims are
+    split into temporal/height/width sections, each rotated by its own
+    position component. positions3: [3, B, S] (stub frontend supplies
+    t=h=w=text position for pure-text input, which reduces to plain RoPE).
+    x: [B, H, S, hd].
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    # section sizes over the half-dim frequency axis
+    s0 = int(half * sections[0])
+    s1 = int(half * sections[1])
+    sizes = [s0, s1, half - s0 - s1]
+    inv = rope_freqs(hd, theta)                       # [half]
+    parts, start = [], 0
+    for comp in range(3):
+        sz = sizes[comp]
+        pos = positions3[comp][:, None, :, None].astype(jnp.float32)
+        parts.append(pos * inv[start:start + sz])
+        start += sz
+    ang = jnp.concatenate(parts, axis=-1)             # [B,1,S,half]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# FFN
+# ----------------------------------------------------------------------------
+
+def swiglu_ffn(x, p, ctx):
+    """SwiGLU: (silu(x@wg) * (x@wi)) @ wo — three HBFP matmuls, FP gating."""
+    g = hbfp_matmul(x, p["ffn_wg"], ctx.cfg, ctx.key_for("ffn_g"))
+    u = hbfp_matmul(x, p["ffn_wi"], ctx.cfg, ctx.key_for("ffn_i"))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return hbfp_matmul(h, p["ffn_wo"], ctx.cfg, ctx.key_for("ffn_o"))
+
+
+def gelu_ffn(x, p, ctx):
+    """GeGLU variant (gemma2 uses gelu gating)."""
+    g = hbfp_matmul(x, p["ffn_wg"], ctx.cfg, ctx.key_for("ffn_g"))
+    u = hbfp_matmul(x, p["ffn_wi"], ctx.cfg, ctx.key_for("ffn_i"))
+    h = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype) * u
+    return hbfp_matmul(h, p["ffn_wo"], ctx.cfg, ctx.key_for("ffn_o"))
+
+
+# ----------------------------------------------------------------------------
+# Quantization context — threads HBFPConfig + per-site PRNG keys through
+# model code without global state.
+# ----------------------------------------------------------------------------
+
+class Ctx:
+    __slots__ = ("cfg", "key", "compute_dtype", "act_constraint", "shard_fn")
+
+    def __init__(self, cfg, key=None, compute_dtype=jnp.float32,
+                 act_constraint=None, shard_fn=None):
+        self.cfg = cfg
+        self.key = key
+        self.compute_dtype = compute_dtype
+        # optional fn(x)->x applying a sharding constraint to the residual
+        # stream at layer boundaries (sequence parallelism; launcher-set)
+        self.act_constraint = act_constraint
+        # optional fn(x, logical_axes)->x mapping logical axis names
+        # ("groups", "experts", ...) to mesh axes (launcher-set); model code
+        # calls ctx.shard(...) at layout-critical intermediates (MoE
+        # dispatch) without knowing the mesh
+        self.shard_fn = shard_fn
+
+    def shard(self, x, logical_axes):
+        if self.shard_fn is None:
+            return x
+        return self.shard_fn(x, logical_axes)
+
+    def key_for(self, site: str):
+        if self.key is None or self.cfg is None \
+                or self.cfg.rounding != "stochastic":
+            return None
+        return jax.random.fold_in(self.key,
+                                  int.from_bytes(site.encode()[:4], "little"))
+
+    def fold(self, i) -> "Ctx":
+        """Child context for layer i (i may be a traced int32)."""
+        k = None if self.key is None else jax.random.fold_in(self.key, i)
+        return Ctx(self.cfg, k, self.compute_dtype, self.act_constraint,
+                   self.shard_fn)
+
+
+def init_linear(key, d_in, d_out, scale=None, dtype=jnp.float32):
+    s = (1.0 / jnp.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), dtype) * s).astype(dtype)

@@ -1,0 +1,142 @@
+"""Mixture-of-Experts with grouped capacity dispatch (GShard/Switch style).
+
+Expert FFN matmuls run in HBFP (they are the dominant dot products of MoE
+archs); the router — a tiny matmul feeding a range-sensitive softmax/top-k —
+stays FP32 (DESIGN.md §5: excluded by name "router"). Dispatch/combine
+einsums are one-hot permutations, not value dot products, and stay FP.
+
+Supports: top-k routing with normalized gates, capacity factor, aux
+load-balance loss, a parallel dense-FFN residual (snowflake-arctic) and a
+shared expert (llama4-scout). Experts are sharded over the `model` mesh axis
+(expert parallelism); groups ride the `data` axis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hbfp_ops import hbfp_matmul
+from repro.models.layers import swiglu_ffn
+
+
+def route(x, router_w, n_experts: int, top_k: int):
+    """x: [G, T, D] grouped tokens → (gates [G,T,k], idx [G,T,k], aux)."""
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E · Σ_e f_e · p_e
+    me = probs.mean(axis=(0, 1))                               # [E]
+    ce = jax.nn.one_hot(idx[..., 0], n_experts).mean(axis=(0, 1))
+    aux = n_experts * jnp.sum(me * ce)
+    return gates, idx, aux
+
+
+def make_dispatch(gates, idx, n_experts: int, capacity: int, dtype):
+    """GShard dispatch/combine tensors, both [G, T, E, Cap]."""
+    G, T, k = idx.shape
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=jnp.int32)    # [G,T,k,E]
+    flat = onehot.reshape(G, T * k, n_experts)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, T, k, n_experts)
+    slot = (pos * onehot).sum(-1)                                # [G,T,k]
+    keep = (slot < capacity)
+    slot_oh = jax.nn.one_hot(jnp.where(keep, slot, capacity), capacity,
+                             dtype=dtype)                        # [G,T,k,Cap]
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot.astype(dtype), slot_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot.astype(jnp.float32),
+                         slot_oh.astype(jnp.float32),
+                         gates).astype(dtype)
+    return dispatch, combine
+
+
+def moe_ffn(x, p, ctx, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25, n_groups: Optional[int] = None,
+            dense_residual: bool = False, shared_expert: bool = False,
+            group_tokens: int = 2048):
+    """x: [B, S, D] -> ([B, S, D], aux_loss).
+
+    Tokens are routed within groups of ~group_tokens (GShard): the dispatch
+    tensor is [G, T, E, Cap] with Cap ∝ T/E, i.e. O(tokens · T) — bounded
+    group size keeps it linear in sequence length.
+    """
+    B, S, D = x.shape
+    T_all = B * S
+    G = n_groups or max(1, T_all // group_tokens)
+    while T_all % G:
+        G += 1          # search up: smaller groups, never bigger
+    G = min(G, T_all)
+    T = T_all // G
+    xg = x.reshape(G, T, D)
+
+    gates, idx, aux = route(xg, p["router_w"], n_experts, top_k)
+    # capacity ≥ top_k so single-token decode groups never drop a choice
+    capacity = max(top_k, int(T * top_k * capacity_factor / n_experts))
+    dispatch, combine = make_dispatch(gates, idx, n_experts, capacity,
+                                      x.dtype)
+    # layout hints: dispatch/combine stay group-local (data axis); the
+    # expert batch crosses to expert-parallel layout (model axis) — the
+    # all-to-all happens HERE, on the [E,G,Cap,D] payload, not on the
+    # one-hot dispatch tensors
+    dispatch = ctx.shard(dispatch, ("groups", None, None, None))
+    combine = ctx.shard(combine, ("groups", None, None, None))
+
+    expert_in = jnp.einsum("gtec,gtd->egcd", dispatch, xg)      # [E,G,Cap,D]
+    expert_in = ctx.shard(expert_in, ("experts", None, None, None))
+    expert_in = expert_in.reshape(n_experts, -1, D)
+
+    # per-expert SwiGLU in HBFP: [E, G·Cap, D] @ [E, D, F]
+    g = hbfp_matmul(expert_in, p["moe_wg"], ctx.cfg, ctx.key_for("moe_g"))
+    u = hbfp_matmul(expert_in, p["moe_wi"], ctx.cfg, ctx.key_for("moe_i"))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    eo = hbfp_matmul(h, p["moe_wo"], ctx.cfg, ctx.key_for("moe_o"))
+    eo = eo.reshape(n_experts, G, capacity, D)
+    # route expert outputs HOME before combining: an all-to-all on the
+    # [E,G,Cap,D] payload (E-sharded -> G-sharded). Without this, the
+    # combine einsum contracts the E-sharded axis into G-sharded output and
+    # XLA all-reduces FULL [G,T,D] activation partial sums per layer —
+    # measured 15 GB/layer on arctic prefill_32k (§Perf iteration 2).
+    eo = ctx.shard(eo, (None, "groups", None, None))
+
+    out = jnp.einsum("gtec,egcd->gtd", combine, eo).reshape(B, S, D)
+
+    if shared_expert:
+        shared = {k_.replace("shared_", "ffn_"): v for k_, v in p.items()
+                  if k_.startswith("shared_")}
+        out = out + swiglu_ffn(x, shared, ctx)
+    if dense_residual:
+        out = out + swiglu_ffn(x, p, ctx)
+    return out, aux
+
+
+def init_moe(key, d_model, d_ff, n_experts, dtype=jnp.float32,
+             dense_residual=False, dense_ff=None, shared_expert=False):
+    ks = jax.random.split(key, 8)
+    s = d_model ** -0.5
+    sf = d_ff ** -0.5
+    p = {
+        "router_w": jax.random.normal(ks[0], (d_model, n_experts),
+                                      jnp.float32) * s,
+        "moe_wg": jax.random.normal(ks[1], (n_experts, d_model, d_ff),
+                                    dtype) * s,
+        "moe_wi": jax.random.normal(ks[2], (n_experts, d_model, d_ff),
+                                    dtype) * s,
+        "moe_wo": jax.random.normal(ks[3], (n_experts, d_ff, d_model),
+                                    dtype) * sf,
+    }
+    prefix = None
+    if dense_residual:
+        prefix = "ffn_"
+    elif shared_expert:
+        prefix = "shared_"
+    if prefix:
+        dff = dense_ff or d_ff
+        p.update({
+            f"{prefix}wg": jax.random.normal(ks[4], (d_model, dff), dtype) * s,
+            f"{prefix}wi": jax.random.normal(ks[5], (d_model, dff), dtype) * s,
+            f"{prefix}wo": jax.random.normal(ks[6], (dff, d_model), dtype)
+            * (dff ** -0.5),
+        })
+    return p

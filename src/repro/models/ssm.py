@@ -1,0 +1,150 @@
+"""Selective SSM (Mamba-2/SSD chunked form) — the mamba branch of hymba.
+
+TPU adaptation (DESIGN.md §2): Hymba's mamba heads are computed in the
+chunkwise-parallel SSD formulation — within a chunk the recurrence is a
+decay-masked attention-like matmul (MXU-friendly), across chunks a small
+lax.scan carries the [B,H,P,N] state. This is sub-quadratic (O(S·Q)) and is
+what makes the long_500k cell runnable for hybrid/ssm archs.
+
+HBFP: the in/out projections are ordinary dot products → BFP. The recurrence
+itself (decay products, small C·h contractions) is gating/state arithmetic
+with wide dynamic range → FP, per the paper's hybrid rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hbfp_ops import hbfp_matmul
+
+
+def _chunk_scan(xh, dt, logdecay, Bm, Cm, h0, chunk: int,
+                unroll: bool = False):
+    """SSD chunked scan.
+
+    xh:  [B, S, H, P]   (dt-scaled inputs)
+    dt:  [B, S, H]      (already folded into xh by caller; kept for clarity)
+    logdecay: [B, S, H] log a_t  (a_t = exp(dt·A) ∈ (0,1))
+    Bm, Cm:   [B, S, N] shared across heads (mamba-2 single group)
+    h0:  [B, H, P, N] initial state
+    Returns (y [B,S,H,P], h_end).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # dt=0 padding: decay 1, zero input ⇒ state passes through unchanged
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        xh, logdecay, Bm, Cm = map(zpad, (xh, logdecay, Bm, Cm))
+    Sp = S + pad
+    nc = Sp // Q
+    r = lambda t: t.reshape(B, nc, Q, *t.shape[2:])
+    xh_c, ld_c = r(xh), r(logdecay)
+    B_c, C_c = r(Bm), r(Cm)
+
+    # cumulative log decay within chunk: L[b,c,t,h]
+    L = jnp.cumsum(ld_c, axis=2)
+
+    def step(h, xs):
+        xck, ldk, Lk, Bk, Ck = xs          # [B,Q,H,P],[B,Q,H],[B,Q,H],[B,Q,N]
+        # intra-chunk: M[t,s,h] = exp(L_t - L_s) · (C_t·B_s), s ≤ t
+        cb = jnp.einsum("btn,bsn->bts", Ck, Bk)            # [B,Q,Q]
+        dl = Lk[:, :, None, :] - Lk[:, None, :, :]          # [B,Q,Q,H]
+        causal = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        # mask BEFORE exp: dl > 0 above the diagonal would overflow and
+        # poison gradients through the masked branch
+        dl = jnp.where(causal, dl, -jnp.inf)
+        M = jnp.exp(dl) * cb[..., None]                     # [B,t,s,H]
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xck)
+        # inter-chunk: y += exp(L_t)·C_t·h0
+        y_inter = jnp.einsum("btn,bhpn,bth->bthp", Ck, h,
+                             jnp.exp(Lk))
+        # chunk-final state
+        Ltot = Lk[:, -1]                                    # [B,H]
+        w = jnp.exp(Ltot[:, None] - Lk)                     # [B,Q,H]
+        dh = jnp.einsum("bth,bthp,btn->bhpn", w, xck, Bk)
+        h_new = jnp.exp(Ltot)[:, :, None, None] * h + dh
+        return h_new, y_intra + y_inter
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh_c, ld_c, L, B_c, C_c))
+    if unroll:
+        # python loop (roofline extraction: per-chunk flops visible in HLO)
+        h, ys = h0, []
+        for c in range(nc):
+            h, yc = step(h, tuple(t[c] for t in xs))
+            ys.append(yc)
+        h_end, y = h, jnp.stack(ys)
+    else:
+        h_end, y = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(y, 0, 1).reshape(B, Sp, H, P)[:, :S]
+    return y, h_end
+
+
+def ssm_branch(u, p, ctx, *, n_heads: int, d_state: int, chunk: int = 128,
+               state=None, unroll: bool = False):
+    """Mamba-2 style branch. u: [B, S, D].
+
+    Params: ssm_in_w [D, 2*di + 2*N + H] (z, x, B, C, dt), ssm_out_w [di, D],
+    ssm_a_log [H], ssm_dt_bias [H], ssm_d [H], ssm_norm_scale [di].
+    state: (h [B,H,P,N], ) for decode (S==1) or None.
+    Returns (y [B,S,D], new_state).
+    """
+    B, S, D = u.shape
+    di = p["ssm_out_w"].shape[0]
+    P = di // n_heads
+    N = d_state
+    zxbcdt = hbfp_matmul(u, p["ssm_in_w"], ctx.cfg, ctx.key_for("ssm_in"))
+    z, xr, Bm, Cm, dt_raw = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["ssm_dt_bias"])               # [B,S,H]
+    A = -jnp.exp(p["ssm_a_log"].astype(jnp.float32))       # [H]
+    logdecay = dt * A                                      # [B,S,H]
+    xh = xr.astype(jnp.float32).reshape(B, S, n_heads, P)
+    xh_dt = xh * dt[..., None]
+    Bmf = Bm.astype(jnp.float32)
+    Cmf = Cm.astype(jnp.float32)
+
+    if state is None:
+        h0 = jnp.zeros((B, n_heads, P, N), jnp.float32)
+        y, h_end = _chunk_scan(xh_dt, dt, logdecay, Bmf, Cmf, h0, chunk,
+                               unroll)
+    else:
+        (h0,) = state
+        # single-step: h = a·h + dt·x⊗B ; y = C·h
+        a = jnp.exp(logdecay[:, 0])                        # [B,H]
+        h_end = a[:, :, None, None] * h0 + \
+            jnp.einsum("bhp,bn->bhpn", xh_dt[:, 0], Bmf[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", Cmf[:, 0], h_end)[:, None]
+
+    y = y + xh * p["ssm_d"][None, None, :, None]           # skip connection
+    y = y.reshape(B, S, di)
+    # gated RMS-norm output (mamba-2): norm(y) * silu(z)
+    yf = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-6)
+    yf = yf * p["ssm_norm_scale"] * jax.nn.silu(z.astype(jnp.float32))
+    out = hbfp_matmul(yf.astype(u.dtype), p["ssm_out_w"], ctx.cfg,
+                      ctx.key_for("ssm_out"))
+    return out, (h_end,)
+
+
+def init_ssm(key, d_model, d_inner, n_heads, d_state, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * d_state + n_heads
+    return {
+        "ssm_in_w": jax.random.normal(ks[0], (d_model, d_in_proj), dtype)
+        * d_model ** -0.5,
+        "ssm_out_w": jax.random.normal(ks[1], (d_inner, d_model), dtype)
+        * d_inner ** -0.5,
+        "ssm_a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads,
+                                          dtype=jnp.float32)),
+        "ssm_dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "ssm_d": jnp.ones((n_heads,), jnp.float32),
+        "ssm_norm_scale": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def ssm_state_init(batch, n_heads, d_inner, d_state):
+    P = d_inner // n_heads
+    return (jnp.zeros((batch, n_heads, P, d_state), jnp.float32),)

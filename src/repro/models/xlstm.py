@@ -1,0 +1,234 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM (arXiv:2405.04517).
+
+mLSTM: matrix memory C ∈ R^{dv×dk} with exponential input gate and sigmoid
+forget gate, computed in the chunkwise-parallel form (within-chunk decay-
+masked attention on the MXU, cross-chunk state scan) with the max-stabilizer
+m carried across chunks — O(S·Q) compute, O(1) decode state, which is what
+makes xlstm-350m runnable at the long_500k cell.
+
+sLSTM: scalar memory with block-diagonal recurrent weights — a true
+h_{t-1} recurrence, computed with lax.scan over time.
+
+HBFP: all projections (q/k/v/gates/up/down) are BFP dot products; the gating
+recurrences are exponential-range FP state arithmetic and stay FP — the
+textbook case for the paper's hybrid split.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hbfp_ops import hbfp_matmul
+from repro.models.layers import rms_norm
+
+LOG_EPS = -30.0
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+# ----------------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------------
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state, chunk: int,
+                    unroll: bool = False):
+    """q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_i/log_f: [B,S,H].
+    state: (C [B,H,dv,dk], n [B,H,dk], m [B,H]). Returns (h, state)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # padding: i-gate -> 0 (LOG_EPS), f-gate -> 1 (0) keeps state intact
+        zpad = lambda t, val=0.0: jnp.pad(
+            t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2),
+            constant_values=val)
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_i = zpad(log_i, LOG_EPS)
+        log_f = zpad(log_f, 0.0)
+    Sp = S + pad
+    nc = Sp // Q
+    r = lambda t: jnp.moveaxis(t.reshape(B, nc, Q, *t.shape[2:]), 1, 0)
+    qs, ks, vs, lis, lfs = map(r, (q, k, v, log_i, log_f))
+
+    def step(carry, xs):
+        C0, n0, m0 = carry
+        qc, kc, vc, li, lf = xs            # [B,Q,H,*]
+        F = jnp.cumsum(lf, axis=1)                              # [B,Q,H]
+        # intra: w[t,s] = F_t - F_s + log i_s (s<=t);  inter: b_t = F_t + m0
+        w = F[:, :, None] - F[:, None] + li[:, None]            # [B,t,s,H]
+        b = F + m0[:, None]                                     # [B,Q,H]
+        causal = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        w = jnp.where(causal, w, LOG_EPS)
+        m_t = jnp.maximum(w.max(axis=2), b)                     # [B,Q,H]
+        wn = jnp.exp(w - m_t[:, :, None])                       # [B,t,s,H]
+        bn = jnp.exp(b - m_t)                                   # [B,Q,H]
+        qk = jnp.einsum("bthk,bshk->btsh", qc, kc)              # [B,t,s,H]
+        num = jnp.einsum("btsh,btsh,bshv->bthv", qk, wn, vc)
+        num = num + bn[..., None] * jnp.einsum("bthk,bhvk->bthv", qc, C0)
+        nq = jnp.einsum("btsh,btsh->bth", qk, wn) \
+            + bn * jnp.einsum("bthk,bhk->bth", qc, n0)
+        den = jnp.maximum(jnp.abs(nq), jnp.exp(-m_t))
+        h = num / den[..., None]                                # [B,Q,H,dv]
+        # chunk-final state
+        Ftot = F[:, -1]                                         # [B,H]
+        m_end = jnp.maximum(Ftot + m0,
+                            (Ftot[:, None] - F + li).max(axis=1))
+        sw = jnp.exp(Ftot[:, None] - F + li - m_end[:, None])   # [B,Q,H]
+        C1 = jnp.exp(Ftot + m0 - m_end)[:, :, None, None] * C0 \
+            + jnp.einsum("bsh,bshv,bshk->bhvk", sw, vc, kc)
+        n1 = jnp.exp(Ftot + m0 - m_end)[:, :, None] * n0 \
+            + jnp.einsum("bsh,bshk->bhk", sw, kc)
+        return (C1, n1, m_end), h
+
+    xs = (qs, ks, vs, lis, lfs)
+    if unroll:
+        st, ys = state, []
+        for c in range(nc):
+            st, hc = step(st, tuple(t[c] for t in xs))
+            ys.append(hc)
+        state, hs = st, jnp.stack(ys)
+    else:
+        state, hs = jax.lax.scan(step, state, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, Sp, H, dv)[:, :S]
+    return h, state
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """Single decode step. q,k: [B,1,H,dk]; v: [B,1,H,dv]."""
+    C0, n0, m0 = state
+    li, lf = log_i[:, 0], log_f[:, 0]                           # [B,H]
+    m1 = jnp.maximum(lf + m0, li)
+    fp = jnp.exp(lf + m0 - m1)
+    ip = jnp.exp(li - m1)
+    C1 = fp[:, :, None, None] * C0 + ip[:, :, None, None] * \
+        jnp.einsum("bhv,bhk->bhvk", v[:, 0], k[:, 0])
+    n1 = fp[:, :, None] * n0 + ip[:, :, None] * k[:, 0]
+    nq = jnp.einsum("bhk,bhk->bh", n1, q[:, 0])
+    den = jnp.maximum(jnp.abs(nq), jnp.exp(-m1))
+    h = jnp.einsum("bhvk,bhk->bhv", C1, q[:, 0]) / den[..., None]
+    return h[:, None], (C1, n1, m1)
+
+
+def mlstm_block(x, p, ctx, *, n_heads: int, chunk: int = 128, state=None,
+                unroll: bool = False):
+    """Pre-norm mLSTM block with 2× up-projection and gated output."""
+    B, S, D = x.shape
+    xn = rms_norm(x, p["norm_scale"])
+    up = hbfp_matmul(xn, p["mlstm_up_w"], ctx.cfg, ctx.key_for("up"))
+    inner, gate = jnp.split(up, 2, axis=-1)                    # [B,S,D] each
+    dk = D // n_heads
+    proj = hbfp_matmul(inner, p["mlstm_qkv_w"], ctx.cfg, ctx.key_for("qkv"))
+    q, k, v = jnp.split(proj, 3, axis=-1)
+    gpre = hbfp_matmul(inner, p["mlstm_gates_w"], ctx.cfg,
+                       ctx.key_for("gates")) + p["mlstm_gates_bias"]
+    shp = (B, S, n_heads, dk)
+    q = q.reshape(shp).astype(jnp.float32)
+    k = (k.reshape(shp) * dk ** -0.5).astype(jnp.float32)
+    v = v.reshape(shp).astype(jnp.float32)
+    li = gpre[..., :n_heads].astype(jnp.float32)               # exp input gate
+    lf = _logsigmoid(gpre[..., n_heads:].astype(jnp.float32))
+    if state is None:
+        st = (jnp.zeros((B, n_heads, dk, dk), jnp.float32),
+              jnp.zeros((B, n_heads, dk), jnp.float32),
+              jnp.zeros((B, n_heads), jnp.float32))
+        h, st = mlstm_chunkwise(q, k, v, li, lf, st, chunk, unroll)
+    else:
+        h, st = mlstm_step(q, k, v, li, lf, state)
+    h = h.reshape(B, S, D).astype(x.dtype)
+    h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = hbfp_matmul(h, p["mlstm_down_w"], ctx.cfg, ctx.key_for("down"))
+    return x + out, st
+
+
+# ----------------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------------
+
+def slstm_seq(gx, r_w, h0, c0, n0, m0, n_heads: int):
+    """gx: [B,S,4*D] input-gate preactivations. Block-diagonal recurrence.
+    Returns (h [B,S,D], (h,c,n,m))."""
+    B, S, D4 = gx.shape
+    D = D4 // 4
+    dh = D // n_heads
+
+    def step(carry, g_t):
+        h, c, n, m = carry                                     # [B,D]...
+        hr = h.reshape(B, n_heads, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hr, r_w).reshape(B, 4 * D)
+        zi, zf, zz, zo = jnp.split(g_t + rec, 4, axis=-1)
+        lf = _logsigmoid(zf)
+        m1 = jnp.maximum(lf + m, zi)
+        ip = jnp.exp(zi - m1)
+        fp = jnp.exp(lf + m - m1)
+        c1 = fp * c + ip * jnp.tanh(zz)
+        n1 = fp * n + ip
+        h1 = jax.nn.sigmoid(zo) * c1 / jnp.maximum(n1, 1e-6)
+        return (h1, c1, n1, m1), h1
+
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0),
+                                    jnp.moveaxis(gx, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), (h, c, n, m)
+
+
+def slstm_block(x, p, ctx, *, n_heads: int, state=None):
+    B, S, D = x.shape
+    xn = rms_norm(x, p["norm_scale"])
+    gx = hbfp_matmul(xn, p["slstm_in_w"], ctx.cfg,
+                     ctx.key_for("sin")).astype(jnp.float32)   # [B,S,4D]
+    if state is None:
+        z = jnp.zeros((B, D), jnp.float32)
+        state = (z, z, z, jnp.full((B, D), 0.0, jnp.float32))
+    h, state = slstm_seq(gx, p["slstm_r_w"].astype(jnp.float32), *state,
+                         n_heads=n_heads)
+    out = hbfp_matmul(h.astype(x.dtype), p["slstm_out_w"], ctx.cfg,
+                      ctx.key_for("sout"))
+    return x + out, state
+
+
+def init_mlstm(key, d_model, n_heads, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return {
+        "norm_scale": jnp.ones((d_model,), jnp.float32),
+        "mlstm_up_w": jax.random.normal(ks[0], (d_model, 2 * d_model),
+                                        dtype) * s,
+        "mlstm_qkv_w": jax.random.normal(ks[1], (d_model, 3 * d_model),
+                                         dtype) * s,
+        "mlstm_gates_w": jax.random.normal(ks[2], (d_model, 2 * n_heads),
+                                           dtype) * s,
+        "mlstm_gates_bias": jnp.concatenate([
+            jnp.zeros((n_heads,), jnp.float32),
+            jnp.linspace(3.0, 6.0, n_heads, dtype=jnp.float32)]),  # f-gate
+        "mlstm_down_w": jax.random.normal(ks[3], (d_model, d_model),
+                                          dtype) * s,
+    }
+
+
+def init_slstm(key, d_model, n_heads, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    s = d_model ** -0.5
+    dh = d_model // n_heads
+    return {
+        "norm_scale": jnp.ones((d_model,), jnp.float32),
+        "slstm_in_w": jax.random.normal(ks[0], (d_model, 4 * d_model),
+                                        dtype) * s,
+        "slstm_r_w": jax.random.normal(ks[1], (n_heads, dh, 4 * dh),
+                                       dtype) * (dh ** -0.5),
+        "slstm_out_w": jax.random.normal(ks[2], (d_model, d_model),
+                                         dtype) * s,
+    }
+
+
+def mlstm_state_init(batch, n_heads, d_model):
+    dk = d_model // n_heads
+    return (jnp.zeros((batch, n_heads, dk, dk), jnp.float32),
+            jnp.zeros((batch, n_heads, dk), jnp.float32),
+            jnp.zeros((batch, n_heads), jnp.float32))
+
+
+def slstm_state_init(batch, d_model):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return (z, z, z, z)

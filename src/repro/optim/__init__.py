@@ -1,0 +1,2 @@
+from repro.optim.adamw import OptState, adamw_init, adamw_update
+from repro.optim.schedule import make_schedule

@@ -1,0 +1,56 @@
+"""AdamW in pure JAX (no optax dependency).
+
+Moments are kept in f32. For ZeRO-1 the trainer shards this state over the
+full mesh (see sharding/partitioning.py); the math here is sharding-agnostic.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # i32 scalar
+    mu: object               # first moment pytree (f32)
+    nu: object               # second moment pytree (f32)
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: OptState, params, *,
+                 lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 grad_clip: float = 1.0):
+    """Returns (updates, new_state). lr may be a scalar or schedule(step)."""
+    step = state.step + 1
+    if callable(lr):
+        lr_t = lr(step)
+    else:
+        lr_t = jnp.asarray(lr, jnp.float32)
+
+    gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if grad_clip is not None:
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        gf = jax.tree.map(lambda g: g * scale, gf)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, gf)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, gf)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(m, v, p):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay and p.ndim >= 2:  # decoupled decay on matrices only
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (-lr_t * u)
+
+    updates = jax.tree.map(upd, mu, nu, params)
+    return updates, OptState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,41 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay, MiniCPM
+arXiv:2404.06395 — assigned arch minicpm-2b trains with it)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, *, base_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.1,
+                  decay_frac: float = 0.1):
+    """Returns schedule(step) -> lr (f32 scalar).
+
+    kind: "cosine" | "wsd" | "constant".
+    wsd: linear warmup → stable plateau → sharp decay over the last
+    decay_frac of training (MiniCPM §4; exponential-style decay approximated
+    with a cosine tail as in open reimplementations).
+    """
+    wu = max(warmup_steps, 1)
+
+    def cosine(step):
+        s = step.astype(jnp.float32)
+        warm = s / wu
+        prog = jnp.clip((s - wu) / max(total_steps - wu, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < wu, warm, cos)
+
+    def wsd(step):
+        s = step.astype(jnp.float32)
+        warm = s / wu
+        decay_steps = max(int(total_steps * decay_frac), 1)
+        decay_start = total_steps - decay_steps
+        prog = jnp.clip((s - decay_start) / decay_steps, 0.0, 1.0)
+        tail = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        stable = jnp.where(s < decay_start, 1.0, tail)
+        return base_lr * jnp.where(s < wu, warm, stable)
+
+    def constant(step):
+        s = step.astype(jnp.float32)
+        return base_lr * jnp.minimum(s / wu, 1.0)
+
+    return {"cosine": cosine, "wsd": wsd, "constant": constant}[kind]

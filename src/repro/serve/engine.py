@@ -1,0 +1,146 @@
+"""Continuous-batching serving engine.
+
+A fixed pool of `max_batch` cache lanes; requests are admitted into free
+lanes (prefill writes the prompt KV into the lane), every `step()` advances
+ALL active lanes by one token in a single batched decode, and finished lanes
+(EOS / max_new_tokens) are freed immediately for the next request — the
+vLLM-style schedule, sized for one jit'd decode graph.
+
+Weights are the narrow-BFP serving copy (paper §4.2: 8-bit mantissa weights
+at inference); with arch.bfp_kv_cache the lanes store 8-bit BFP K/V
+(EXPERIMENTS.md §Perf cell 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.formats import HBFPConfig
+from repro.models import decode_step, make_cache, prefill
+from repro.models.layers import Ctx
+from repro.train.serve_step import _serve_cfg, narrow_serving_params
+
+
+@dataclasses.dataclass
+class _Req:
+    rid: int
+    pos: int                 # next position to generate
+    remaining: int
+    tokens: List[int]
+
+
+class ServeEngine:
+    def __init__(self, arch: ArchConfig, params, hbfp: Optional[HBFPConfig],
+                 *, max_batch: int = 8, ctx_len: int = 512,
+                 eos_id: Optional[int] = None, greedy: bool = True,
+                 seed: int = 0):
+        self.arch = arch
+        self.hbfp = _serve_cfg(hbfp)
+        self.params = narrow_serving_params(params, arch, hbfp)
+        self.max_batch = max_batch
+        self.ctx_len = ctx_len
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self._key = jax.random.key(seed)
+        self._ctx = Ctx(self.hbfp, None, jnp.dtype(arch.dtype))
+        self.cache = make_cache(self.params, arch, max_batch, ctx_len)
+        self.slots: List[Optional[_Req]] = [None] * max_batch
+        self._next_rid = 0
+        self._last_tok = jnp.zeros((max_batch, 1), jnp.int32)
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill1 = jax.jit(self._prefill_impl,
+                                 static_argnames=("plen",))
+
+    # -- jitted bodies ----------------------------------------------------
+    def _decode_impl(self, params, cache, tok, pos):
+        batch = {"tokens": tok, "positions": pos}
+        logits, cache = decode_step(params, batch, cache, self.arch,
+                                    self._ctx)
+        return logits[:, 0], cache
+
+    def _prefill_impl(self, params, tokens, plen):
+        pos = jnp.broadcast_to(jnp.arange(plen, dtype=jnp.int32)[None],
+                               (1, plen))
+        return prefill(params, {"tokens": tokens, "positions": pos},
+                       self.arch, self._ctx)
+
+    # -- admission --------------------------------------------------------
+    def submit(self, prompt: List[int], max_new_tokens: int = 32) -> int:
+        """Admit a request; returns rid. Raises if no free lane."""
+        lane = next((i for i, s in enumerate(self.slots) if s is None), None)
+        if lane is None:
+            raise RuntimeError("no free lanes; call step() until one frees")
+        plen = len(prompt)
+        assert plen < self.ctx_len
+        toks = jnp.asarray(prompt, jnp.int32)[None]
+        logits, pcache = self._prefill1(self.params, toks, plen=plen)
+        # write the prompt KV into lane slots [0, plen)
+        self.cache = self._insert_lane(self.cache, pcache, lane, plen)
+        first = self._pick(logits[:, -1])[0]
+        self._last_tok = self._last_tok.at[lane, 0].set(first)
+        self.slots[lane] = _Req(self._next_rid, plen, max_new_tokens - 1,
+                                [int(first)])
+        self._next_rid += 1
+        return self.slots[lane].rid
+
+    def _insert_lane(self, cache, pcache, lane: int, plen: int):
+        def one(path, big, small):
+            name = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                            for k in path)
+            if "kv" in name:
+                if big.ndim == small.ndim and small.shape[1] == 1:
+                    if big.ndim >= 4:   # [L,B,H,C,...]: prompt along dim 3
+                        sl = [slice(None)] * big.ndim
+                        sl[1] = slice(lane, lane + 1)
+                        sl[3] = slice(0, plen)
+                        return big.at[tuple(sl)].set(small)
+                    # slot_pos [L,B,C]
+                    return big.at[:, lane:lane + 1, :plen].set(small)
+            # ssm / xlstm states: [L, 1, ...] -> lane row
+            return big.at[:, lane:lane + 1].set(small)
+
+        return jax.tree_util.tree_map_with_path(one, cache, pcache)
+
+    def _pick(self, logits):
+        if self.greedy:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits).astype(jnp.int32)
+
+    # -- one engine tick ---------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """Advance every active lane one token; returns {rid: token};
+        frees finished lanes."""
+        if not any(self.slots):
+            return {}
+        pos = jnp.asarray([[s.pos if s else 0] for s in self.slots],
+                          jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self._last_tok, pos)
+        nxt = self._pick(logits)
+        out: Dict[int, int] = {}
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            t = int(nxt[i])
+            s.tokens.append(t)
+            s.pos += 1
+            s.remaining -= 1
+            out[s.rid] = t
+            if s.remaining <= 0 or (self.eos_id is not None
+                                    and t == self.eos_id):
+                self.slots[i] = None     # lane freed for the next request
+        self._last_tok = nxt[:, None]
+        return out
+
+    def drain(self) -> Dict[int, List[int]]:
+        """Run until all active requests finish; returns {rid: tokens}."""
+        results: Dict[int, List[int]] = {
+            s.rid: s.tokens for s in self.slots if s}
+        while any(self.slots):
+            self.step()
+        return results

@@ -1,0 +1,3 @@
+from repro.sharding.partitioning import (batch_specs, cache_specs, dp_axes,
+                                         fwd_param_specs, master_param_specs,
+                                         opt_state_specs)

@@ -1,0 +1,80 @@
+"""Serving steps: prefill (prompt → cache + first logits) and decode
+(one token, batched). The decode weights are the *narrow* BFP copy — the
+paper's inference-density win (8-bit mantissa weights) falls out of the same
+opt-shell machinery.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.formats import HBFPConfig
+from repro.core.opt_shell import narrow_params
+from repro.models.layers import Ctx
+from repro.models.transformer import decode_step, make_cache, prefill
+
+
+def _serve_cfg(hbfp):
+    """Serving weights are narrowed once at load time
+    (narrow_serving_params); skip per-step re-quantization (idempotent)."""
+    return None if hbfp is None else hbfp.with_(requantize_weights=False)
+
+
+def make_prefill_fn(arch: ArchConfig, hbfp: Optional[HBFPConfig]):
+    compute_dtype = jnp.dtype(arch.dtype)
+    hbfp = _serve_cfg(hbfp)
+
+    def prefill_fn(params, batch, key=None):
+        ctx = Ctx(hbfp, key, compute_dtype)
+        return prefill(params, batch, arch, ctx)
+
+    return prefill_fn
+
+
+def make_decode_fn(arch: ArchConfig, hbfp: Optional[HBFPConfig]):
+    """decode_fn(params, batch, cache) -> (logits, cache). `params` must be
+    the narrow serving copy (narrow_serving_params)."""
+    compute_dtype = jnp.dtype(arch.dtype)
+    hbfp = _serve_cfg(hbfp)
+
+    def decode_fn(params, batch, cache, key=None):
+        ctx = Ctx(hbfp, key, compute_dtype)
+        return decode_step(params, batch, cache, arch, ctx)
+
+    return decode_fn
+
+
+def narrow_serving_params(params, arch: ArchConfig,
+                          hbfp: Optional[HBFPConfig]):
+    """One-time weight narrowing + cast for serving."""
+    compute_dtype = jnp.dtype(arch.dtype)
+    p = narrow_params(params, hbfp)
+    return jax.tree.map(
+        lambda x: x.astype(compute_dtype) if x.ndim >= 2 else x, p)
+
+
+def prefill_to_decode_cache(cache, arch: ArchConfig, ctx_len: int):
+    """Grow a prefill cache (C = prompt length) into a decode cache
+    (C = ctx_len ring). Slot i of the prefill cache holds position i, which
+    in a ctx_len ring lives at slot i % ctx_len = i (prompt < ctx_len)."""
+    def grow(leaf, fill):
+        # KV leaves: [L, B, Hkv, C, hd] / slot_pos [L, B, C]
+        if leaf.ndim == 5:
+            pad = ctx_len - leaf.shape[3]
+            return jnp.pad(leaf, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        pad = ctx_len - leaf.shape[2]
+        return jnp.pad(leaf, ((0, 0), (0, 0), (0, pad)),
+                       constant_values=fill)
+
+    def one(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if name.endswith("slot_pos"):
+            return grow(leaf, -1)
+        if "kv" in name and leaf.ndim == 5:
+            return grow(leaf, 0)
+        return leaf  # ssm / xlstm states are length-independent
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -1,0 +1,131 @@
+"""HBFP training step.
+
+Exactly the paper's §5.1 loop, distributed:
+
+  1. narrow  = Q_narrow(master)           # 8/12-bit compute copy, cast to
+     (cast to arch dtype, TP-only sharding)  # bf16 — exact for m ≤ 8
+  2. grads   = ∇ loss(narrow, batch)      # all dot products BFP (custom VJP)
+  3. updates = AdamW(grads)  in f32
+  4. master  = Q_wide(master + updates)   # 16-bit wide weight storage
+
+Distribution notes (beyond-paper, DESIGN.md §2):
+  * master params + moments live ZeRO-1-sharded over (pod, data); step 1's
+    sharding constraint makes XLA all-gather the *narrow bf16* copy — a 4×
+    cheaper gather than f32 ZeRO, which is the paper's "lower communication
+    bandwidth" claim realized for DP training;
+  * gradient accumulation via lax.scan over microbatches;
+  * optional BFP-compressed gradient all-reduce (grad_compress.py) for the
+    shard_map DP path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.formats import HBFPConfig
+from repro.core.opt_shell import hbfp_apply_updates, narrow_params
+from repro.models.layers import Ctx
+from repro.models.transformer import loss_fn
+from repro.optim.adamw import OptState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any          # master weights (wide-BFP values in f32 containers)
+    opt: OptState
+    step: jax.Array      # i32
+
+
+def init_train_state(key, arch: ArchConfig, init_params_fn) -> TrainState:
+    params = init_params_fn(key, arch)
+    # master weights are f32 (wide 16-bit BFP mantissas don't fit bf16)
+    params = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(arch: ArchConfig, hbfp: Optional[HBFPConfig],
+                    schedule, *, grad_accum: int = 1,
+                    fwd_constraint=None, grad_constraint=None,
+                    act_constraint=None, shard_fn=None,
+                    weight_decay: float = 0.1,
+                    grad_clip: float = 1.0,
+                    accum_unroll: bool = False):
+    """Returns train_step(state, batch, key) -> (state, metrics).
+
+    fwd_constraint: optional fn(params_pytree) -> params_pytree applying
+    with_sharding_constraint for the TP-only fwd copy (set by the launcher;
+    identity on single device).
+    grad_constraint: optional fn(grads)->grads constraining gradients to the
+    ZeRO-sharded master layout — turns the DP all-reduce into a
+    reduce-scatter (each rank only needs its update shard).
+    act_constraint: optional fn(x)->x sequence-parallel residual-stream
+    constraint (threaded through Ctx into the layer scan).
+    """
+    compute_dtype = jnp.dtype(arch.dtype)
+    if hbfp is not None:
+        # weights are narrowed once per step by narrow_params below —
+        # skip the (idempotent) per-matmul weight re-quantization
+        hbfp = hbfp.with_(requantize_weights=False)
+
+    def cast(p):
+        def one(x):
+            # quantizable matrices run in compute dtype; tiny FP params
+            # (norm scales, gates) stay f32
+            return x.astype(compute_dtype) if x.ndim >= 2 else x
+        return jax.tree.map(one, p)
+
+    def loss_at(narrow, batch, key):
+        ctx = Ctx(hbfp, key, compute_dtype, act_constraint, shard_fn)
+        return loss_fn(narrow, batch, arch, ctx)
+
+    def train_step(state: TrainState, batch, key):
+        nkey = None
+        if hbfp is not None and hbfp.rounding == "stochastic":
+            nkey = jax.random.fold_in(key, 0x5EED)
+        narrow = narrow_params(state.params, hbfp, nkey)
+        narrow = cast(narrow)
+        if fwd_constraint is not None:
+            narrow = fwd_constraint(narrow)
+
+        if grad_accum > 1:
+            # batch leaves are [A, ...]; scan accumulates mean grads
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = jax.value_and_grad(loss_at, has_aux=True)(
+                    narrow, mb, key)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / grad_accum,
+                    g_acc, g)
+                return (g_acc, l_acc + l / grad_accum), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              narrow)
+            carry = (g0, jnp.zeros((), jnp.float32))
+            if accum_unroll:  # roofline extraction: per-microbatch ops
+                for a in range(grad_accum):  # visible to cost analysis
+                    carry, _ = micro(carry,
+                                     jax.tree.map(lambda t: t[a], batch))
+                grads, loss = carry
+            else:
+                (grads, loss), _ = jax.lax.scan(micro, carry, batch)
+            metrics = {"loss": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_at, has_aux=True)(narrow, batch, key)
+
+        if grad_constraint is not None:
+            grads = grad_constraint(grads)
+        updates, opt = adamw_update(grads, state.opt, state.params,
+                                    lr=schedule, weight_decay=weight_decay,
+                                    grad_clip=grad_clip)
+        params = hbfp_apply_updates(state.params, updates, hbfp, key)
+        metrics = dict(metrics)
+        metrics["lr"] = schedule(opt.step) if callable(schedule) \
+            else jnp.asarray(schedule)
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return train_step

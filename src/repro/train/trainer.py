@@ -1,0 +1,84 @@
+"""Fault-tolerant training loop.
+
+Behaviours (exercised by tests/test_trainer.py):
+  * auto-resume: on start, restores the latest valid checkpoint and resumes
+    the data pipeline at the checkpointed step (pipeline is a pure function
+    of step — bit-exact resume);
+  * periodic checkpointing, atomic + optional background thread;
+  * preemption simulation: `fail_at_step` raises mid-run, the next Trainer
+    constructed over the same dir resumes losslessly;
+  * elasticity: checkpoints are mesh-independent; restore accepts new
+    shardings (node-loss → restart on a smaller/larger mesh);
+  * straggler note: steps are synchronous SPMD — mitigation at this layer is
+    restart-based (checkpoint elasticity) plus the data pipeline's
+    statelessness; see README §fault-tolerance.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.train.train_step import TrainState
+
+
+class Trainer:
+    def __init__(self, *, train_step: Callable, init_state: TrainState,
+                 data_fn: Callable[[int], Any], ckpt_dir: Optional[str],
+                 ckpt_every: int = 50, keep: int = 3, hbfp=None,
+                 seed: int = 0, background_ckpt: bool = False,
+                 state_shardings=None):
+        self.train_step = train_step
+        self.data_fn = data_fn
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.keep = keep
+        self.hbfp = hbfp
+        self.seed = seed
+        self.background_ckpt = background_ckpt
+        self.state = init_state
+        self.start_step = 0
+        self._pending = None
+        if ckpt_dir is not None and latest_step(ckpt_dir) is not None:
+            self.state, meta = load_checkpoint(ckpt_dir, init_state,
+                                               shardings=state_shardings)
+            self.start_step = int(meta["step"])
+
+    def _maybe_ckpt(self, step: int, force: bool = False):
+        if self.ckpt_dir is None:
+            return
+        if force or (step > 0 and step % self.ckpt_every == 0):
+            if self._pending is not None:
+                self._pending.join()
+                self._pending = None
+            r = save_checkpoint(self.ckpt_dir, step, self.state,
+                                hbfp=self.hbfp, keep=self.keep,
+                                background=self.background_ckpt)
+            if self.background_ckpt:
+                self._pending = r
+
+    def run(self, num_steps: int, *, fail_at_step: Optional[int] = None,
+            log_every: int = 10, log_fn=print):
+        """Run to global step `num_steps` (absolute, resume-aware)."""
+        metrics = {}
+        t0 = time.time()
+        for step in range(self.start_step, num_steps):
+            if fail_at_step is not None and step == fail_at_step:
+                raise RuntimeError(f"simulated preemption at step {step}")
+            batch = self.data_fn(step)
+            key = jax.random.fold_in(jax.random.key(self.seed), step)
+            self.state, metrics = self.train_step(self.state, batch, key)
+            if log_every and step % log_every == 0:
+                ljit = {k: float(v) for k, v in metrics.items()}
+                log_fn(f"step {step:6d} "
+                       + " ".join(f"{k}={v:.4f}" for k, v in ljit.items())
+                       + f" ({time.time() - t0:.1f}s)")
+            self._maybe_ckpt(step + 1)
+        self._maybe_ckpt(num_steps, force=True)
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        return self.state, metrics

@@ -1,0 +1,132 @@
+"""Property tests of the BFP quantizer (the paper's numeric core)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis.extra import numpy as hnp
+
+from repro.core import bfp
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+FINITE = hnp.arrays(
+    np.float32, hnp.array_shapes(min_dims=2, max_dims=3, min_side=1,
+                                 max_side=17),
+    elements=st.floats(np.float32(-1e20), np.float32(1e20), width=32,
+                       allow_nan=False, allow_infinity=False))
+
+
+def _tile_for(x, tile):
+    return (1,) * (x.ndim - 1) + (tile,)
+
+
+@given(FINITE, st.sampled_from([4, 8, 12, 16]),
+       st.sampled_from([None, 2, 8, 24]))
+def test_idempotent(x, m, tile):
+    """Q(Q(x)) == Q(x) bit-exactly (round-to-nearest)."""
+    q1 = bfp.quantize(jnp.asarray(x), m, _tile_for(x, tile))
+    q2 = bfp.quantize(q1, m, _tile_for(x, tile))
+    assert jnp.array_equal(q1, q2), (q1 - q2)
+
+
+@given(FINITE, st.sampled_from([4, 8, 12]))
+def test_error_bound(x, m):
+    """|x - Q(x)| <= delta/2 per element (nearest, no saturation edge)."""
+    xt = jnp.asarray(x)
+    tile = _tile_for(x, None)
+    q = bfp.quantize(xt, m, tile)
+    delta = bfp.tile_scales(xt, m, tile)
+    # elements can saturate only within delta of the tile max boundary
+    lim = (2 ** (m - 1) - 1) * delta
+    inside = jnp.abs(xt) <= lim
+    err = jnp.abs(q - xt)
+    assert bool(jnp.all(jnp.where(inside, err <= delta / 2 + 1e-30, True)))
+
+
+@given(FINITE)
+def test_zero_and_sign_preservation(x):
+    q = bfp.quantize(jnp.asarray(x), 8, _tile_for(x, None))
+    assert bool(jnp.all(jnp.where(x == 0, q == 0, True)))
+    assert bool(jnp.all(q * x >= 0))  # no sign flips
+
+
+@given(FINITE, st.sampled_from([8, 12]), st.sampled_from([None, 8]))
+def test_pack_unpack_matches_quantize(x, m, tile):
+    xt = jnp.asarray(x)
+    ts = _tile_for(x, tile)
+    p = bfp.pack(xt, m, ts)
+    assert jnp.array_equal(bfp.unpack(p), bfp.quantize(xt, m, ts))
+    # mantissas within signed range
+    lim = 2 ** (m - 1) - 1
+    assert int(jnp.abs(p.mantissa.astype(jnp.int32)).max()) <= lim
+
+
+def test_compression_ratio():
+    """Paper: 8-bit BFP halves model size vs FP16, 4x vs FP32 (+exp o/h)."""
+    x = jax.random.normal(jax.random.key(0), (1024, 1024))
+    p = bfp.pack(x, 8, (128, 128))
+    assert p.nbytes < x.nbytes / 3.9  # ~4x minus exponent overhead
+    p16 = bfp.pack(x, 16, (128, 128))
+    assert p16.nbytes < x.nbytes / 1.9
+
+
+def test_stochastic_rounding_unbiased():
+    x = jnp.full((200_000,), 0.37)
+    q = bfp.quantize(x, 4, (None,), "stochastic", jax.random.key(1))
+    assert abs(float(q.mean()) - 0.37) < 2e-3
+
+
+def test_stochastic_requires_key():
+    with pytest.raises(ValueError):
+        bfp.quantize(jnp.ones((4, 4)), 8, (1, None), "stochastic", None)
+
+
+def test_quantize_m24_identity():
+    x = jax.random.normal(jax.random.key(0), (32, 32))
+    assert jnp.array_equal(bfp.quantize(x, 24, (1, None)), x)
+
+
+@given(st.integers(bfp.EXP_FLOOR + 5, 119))
+def test_powers_of_two_exact(e):
+    """Powers of two are exactly representable at any mantissa width
+    (within the documented exponent clamp range)."""
+    x = jnp.asarray([[2.0 ** e, -(2.0 ** e)]], jnp.float32)
+    q = bfp.quantize(x, 4, (1, None))
+    assert jnp.array_equal(q, x)
+
+
+def test_tile_independence():
+    """Values in one tile don't affect another tile's quantization."""
+    x = jax.random.normal(jax.random.key(2), (8, 64))
+    q = bfp.quantize(x, 8, (1, 32))
+    y = x.at[:, 32:].mul(1000.0)
+    qy = bfp.quantize(y, 8, (1, 32))
+    assert jnp.array_equal(q[:, :32], qy[:, :32])
+
+
+def test_exponent_selection_matches_max():
+    """Paper §4: exponent comes from the tile max — the max element never
+    saturates by more than one step."""
+    x = jnp.asarray([[0.001, 0.5, 3.7]], jnp.float32)
+    q = bfp.quantize(x, 8, (1, None))
+    assert abs(float(q[0, 2]) - 3.7) <= float(
+        bfp.tile_scales(x, 8, (1, None))[0, 2])
+
+
+def test_narrow_fp_sim_tbl1():
+    """simulate_narrow_fp: fp32 (m=24,e=8) is identity; tiny formats lose."""
+    x = jax.random.normal(jax.random.key(3), (64,)) * 10
+    assert jnp.allclose(bfp.simulate_narrow_fp(x, 24, 8), x)
+    err2 = jnp.abs(bfp.simulate_narrow_fp(x, 2, 8) - x).mean()
+    err8 = jnp.abs(bfp.simulate_narrow_fp(x, 8, 8) - x).mean()
+    assert float(err2) > float(err8)
+    # 2-bit exponent: range collapse
+    y = jnp.asarray([1e4, 1e-4], jnp.float32)
+    z = bfp.simulate_narrow_fp(y, 8, 2)
+    assert float(jnp.abs(z[0])) < 1e4 or float(z[1]) == 0.0

@@ -1,0 +1,114 @@
+"""HBFP op semantics: forward quantization, custom-VJP backward formulas
+(paper §5.1: dx and dw are themselves BFP dot products)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bfp
+from repro.core.formats import HBFP8_16, HBFP12_16, HBFPConfig
+from repro.core.hbfp_ops import hbfp_conv2d, hbfp_matmul
+
+
+def test_matmul_matches_manual_quantization():
+    x = jax.random.normal(jax.random.key(0), (32, 48))
+    w = jax.random.normal(jax.random.key(1), (48, 16))
+    y = hbfp_matmul(x, w, HBFP8_16)
+    xq = bfp.quantize(x, 8, (1, None))
+    wq = bfp.quantize(w, 8, (48, 16))  # tile 128 > dims -> whole tensor
+    assert jnp.allclose(y, xq @ wq, atol=0, rtol=0)
+
+
+def test_matmul_none_cfg_is_fp32():
+    x = jax.random.normal(jax.random.key(0), (8, 8))
+    w = jax.random.normal(jax.random.key(1), (8, 8))
+    assert jnp.array_equal(hbfp_matmul(x, w, None), x @ w)
+
+
+def test_backward_formulas():
+    """dx = Q(g) @ Q(w)^T and dw = Q(x)^T @ Q(g) exactly (paper §5.1)."""
+    cfg = HBFP8_16
+    x = jax.random.normal(jax.random.key(0), (16, 24))
+    w = jax.random.normal(jax.random.key(1), (24, 8))
+    g = jax.random.normal(jax.random.key(2), (16, 8))
+    dx, dw = jax.vjp(lambda x, w: hbfp_matmul(x, w, cfg), x, w)[1](g)
+    xq = bfp.quantize(x, 8, (1, None))
+    wq = bfp.quantize(w, 8, (24, 8))
+    gq = bfp.quantize(g, 8, (1, None))
+    assert jnp.allclose(dx, gq @ wq.T, atol=0)
+    assert jnp.allclose(dw, xq.T @ gq, atol=0)
+
+
+def test_m24_grads_match_fp32():
+    cfg = HBFPConfig(mantissa_bits=24, wide_mantissa_bits=24)
+    x = jax.random.normal(jax.random.key(0), (8, 12))
+    w = jax.random.normal(jax.random.key(1), (12, 4))
+    g1 = jax.grad(lambda x: hbfp_matmul(x, w, cfg).sum())(x)
+    g2 = jax.grad(lambda x: (x @ w).sum())(x)
+    assert jnp.allclose(g1, g2, atol=1e-6)
+
+
+def test_error_decreases_with_mantissa():
+    x = jax.random.normal(jax.random.key(0), (64, 128))
+    w = jax.random.normal(jax.random.key(1), (128, 64)) * 0.05
+    ref = x @ w
+    errs = []
+    for m in (4, 8, 12):
+        cfg = HBFPConfig(mantissa_bits=m, wide_mantissa_bits=16)
+        errs.append(float(jnp.abs(hbfp_matmul(x, w, cfg) - ref).max()))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_requantize_weights_skip_is_noop_on_prequantized():
+    cfg = HBFP8_16
+    x = jax.random.normal(jax.random.key(0), (16, 32))
+    w = bfp.quantize_weight(
+        jax.random.normal(jax.random.key(1), (32, 8)), cfg)
+    y1 = hbfp_matmul(x, w, cfg)
+    y2 = hbfp_matmul(x, w, cfg.with_(requantize_weights=False))
+    assert jnp.array_equal(y1, y2)
+
+
+def test_batched_and_broadcast():
+    cfg = HBFP12_16
+    a = jax.random.normal(jax.random.key(0), (2, 3, 8, 16))
+    b = jax.random.normal(jax.random.key(1), (2, 3, 16, 4))
+    y = hbfp_matmul(a, b, cfg, w_kind="act")
+    assert y.shape == (2, 3, 8, 4)
+    # broadcast dim (GQA pattern)
+    a2 = a.reshape(2, 3, 1, 8, 16)
+    b2 = b.reshape(2, 3, 1, 16, 4)
+    da, db = jax.vjp(
+        lambda a, b: hbfp_matmul(a, b, cfg, w_kind="act"), a2,
+        jnp.broadcast_to(b2, (2, 3, 5, 16, 4)))[1](
+            jnp.ones((2, 3, 5, 8, 4)))
+    assert da.shape == a2.shape and db.shape == (2, 3, 5, 16, 4)
+
+
+def test_conv2d_matches_lax_conv_at_m24():
+    cfg = HBFPConfig(mantissa_bits=24, wide_mantissa_bits=24)
+    x = jax.random.normal(jax.random.key(0), (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.key(1), (3, 3, 3, 5))
+    y = hbfp_conv2d(x, w, cfg)
+    ref = jax.lax.conv_general_dilated(
+        x, w, (1, 1), ((1, 1), (1, 1)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    assert jnp.allclose(y, ref, atol=1e-4), float(jnp.abs(y - ref).max())
+
+
+def test_conv2d_grads_finite():
+    x = jax.random.normal(jax.random.key(0), (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.key(1), (3, 3, 3, 5)) * 0.1
+    gx, gw = jax.grad(lambda x, w: hbfp_conv2d(x, w, HBFP8_16).sum(),
+                      argnums=(0, 1))(x, w)
+    assert bool(jnp.all(jnp.isfinite(gx))) and bool(jnp.all(jnp.isfinite(gw)))
+
+
+def test_stochastic_vjp_runs_under_jit():
+    cfg = HBFPConfig(mantissa_bits=8, rounding="stochastic")
+    x = jax.random.normal(jax.random.key(0), (8, 16))
+    w = jax.random.normal(jax.random.key(1), (16, 4))
+    k = jax.random.key(3)
+    g = jax.jit(jax.grad(
+        lambda x: hbfp_matmul(x, w, cfg, key=k).sum()))(x)
+    assert g.shape == x.shape and bool(jnp.all(jnp.isfinite(g)))

@@ -1,0 +1,123 @@
+"""Training-loop semantics: HBFP weight storage invariants, convergence on
+structured data, gradient compression, optimizer shell exclusions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (HBFP8_16, bfp, hbfp_apply_updates, is_hbfp_weight,
+                        narrow_params, widen_params)
+from repro.data import SyntheticLM
+from repro.models import init_params
+from repro.optim import adamw_init, adamw_update, make_schedule
+from repro.train import init_train_state, make_train_step
+
+
+def test_wide_storage_is_bfp_fixed_point():
+    """After hbfp_apply_updates, every HBFP weight is a 16-bit wide-BFP
+    fixed point (paper §4.2: weight state lives in wide BFP)."""
+    arch = get_arch("yi-9b").smoke()
+    params = jax.tree.map(lambda p: p.astype(jnp.float32),
+                          init_params(jax.random.key(0), arch))
+    upd = jax.tree.map(lambda p: 0.01 * jnp.ones_like(p), params)
+    new = hbfp_apply_updates(params, upd, HBFP8_16)
+    again = widen_params(new, HBFP8_16)
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(again)):
+        assert jnp.array_equal(a, b)
+
+
+def test_narrow_excludes_fp_params():
+    arch = get_arch("arctic-480b").smoke()
+    params = init_params(jax.random.key(0), arch)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    narrow = narrow_params(params, HBFP8_16)
+    nflat = jax.tree_util.tree_flatten_with_path(narrow)[0]
+    n_quant = n_fp = 0
+    for (path, a), (_, b) in zip(flat, nflat):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if is_hbfp_weight(name, a):
+            n_quant += 1
+        else:
+            assert jnp.array_equal(a, b), name  # untouched
+            n_fp += 1
+    assert n_quant > 0 and n_fp > 0
+    # router and embed specifically excluded
+    names = ["/".join(str(getattr(k, "key", k)) for k in p)
+             for p, _ in flat]
+    assert any("router_w" in n for n in names)
+    assert all(not is_hbfp_weight(n, l) for (p, l), n in zip(flat, names)
+               if "router" in n or "embed" in n or "norm" in n)
+
+
+def test_loss_decreases_hbfp_and_fp32():
+    """Both FP32 and HBFP8_16 learn the markov stream (paper: drop-in)."""
+    arch = get_arch("yi-9b").smoke()
+    pipe = SyntheticLM(arch.vocab_size, 33, 8, seed=3)
+    sched = make_schedule("constant", base_lr=2e-3, warmup_steps=2,
+                          total_steps=40)
+    results = {}
+    for name, cfg in (("fp32", None), ("hbfp8_16", HBFP8_16)):
+        step = jax.jit(make_train_step(arch, cfg, sched))
+        state = init_train_state(jax.random.key(0), arch, init_params)
+        first = last = None
+        for i in range(40):
+            state, m = step(state, pipe.batch(i),
+                            jax.random.fold_in(jax.random.key(0), i))
+            if i == 0:
+                first = float(m["loss"])
+            last = float(m["loss"])
+        results[name] = (first, last)
+        assert last < first - 0.3, (name, first, last)
+    # HBFP tracks FP32 within a reasonable envelope (paper Table 2 analogue)
+    assert abs(results["hbfp8_16"][1] - results["fp32"][1]) < 0.35, results
+
+
+def test_grad_accumulation_matches_full_batch():
+    import dataclasses
+    arch = dataclasses.replace(get_arch("yi-9b").smoke(), dtype="float32")
+    pipe = SyntheticLM(arch.vocab_size, 17, 8, seed=5)
+    sched = make_schedule("constant", base_lr=1e-3, warmup_steps=1,
+                          total_steps=10)
+    b = pipe.batch(0)
+    state0 = init_train_state(jax.random.key(0), arch, init_params)
+
+    step1 = jax.jit(make_train_step(arch, None, sched))
+    s1, m1 = step1(state0, b, jax.random.key(9))
+
+    micro = jax.tree.map(lambda x: x.reshape(4, 2, *x.shape[1:]), b)
+    step4 = jax.jit(make_train_step(arch, None, sched, grad_accum=4))
+    s4, m4 = step4(state0, micro, jax.random.key(9))
+    # grad means differ only by clip ordering; params should be very close
+    d = max(float(jnp.abs(a - c).max())
+            for a, c in zip(jax.tree.leaves(s1.params),
+                            jax.tree.leaves(s4.params)))
+    assert d < 5e-4, d
+
+
+def test_adamw_moves_toward_minimum():
+    params = {"w": jnp.asarray([4.0, -3.0])}
+    opt = adamw_init(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        upd, opt = adamw_update(g, opt, params, lr=0.05, weight_decay=0.0)
+        params = jax.tree.map(lambda p, u: p + u, params, upd)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_wsd_schedule_shape():
+    s = make_schedule("wsd", base_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(s(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(s(jnp.asarray(50))) == pytest.approx(1.0)
+    assert float(s(jnp.asarray(99))) < 0.2
+
+
+def test_grad_compression_roundtrip_and_error_feedback():
+    from repro.core.grad_compress import compress, decompress
+    g = jax.random.normal(jax.random.key(0), (64, 128)) * 0.01
+    p = compress(g, 8)
+    rel = float(jnp.abs(decompress(p) - g).max() / jnp.abs(g).max())
+    assert rel < 0.02
+    # error feedback: residual + decompressed == original
+    resid = g - decompress(p)
+    assert jnp.allclose(decompress(p) + resid, g, atol=1e-7)
