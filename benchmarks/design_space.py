@@ -4,6 +4,12 @@ Paper findings (WRN-28-10/CIFAR-100): ≥8-bit mantissas within 1% of FP32,
 4-bit 4.1% worse; tiles 24/64 within 0.5%, no-tiles 0.8% worse; wide (16-bit)
 weight storage slightly better than narrow. CPU proxy: the yi-9b smoke
 transformer on the markov stream; final losses relative to FP32.
+
+Beyond-paper axis (DESIGN.md §8): `--schedule` sweeps *precision schedules* —
+variable-mantissa runs (Accuracy-Boosters staircase, warmup-then-narrow,
+per-layer mixed precision) against the static formats:
+
+    PYTHONPATH=src python benchmarks/design_space.py --schedule
 """
 import dataclasses
 
@@ -11,11 +17,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.core import HBFPConfig
+from repro.core import (HBFPConfig, constant, staircase, warmup_then_narrow)
 from repro.data import SyntheticLM
 from repro.models import init_params
 from repro.optim import make_schedule
-from repro.train import init_train_state, make_train_step
+from repro.train import (init_train_state, make_scheduled_train_step,
+                         make_train_step)
 
 
 def _final_loss(cfg, steps=40, seed=0):
@@ -23,7 +30,10 @@ def _final_loss(cfg, steps=40, seed=0):
     pipe = SyntheticLM(arch.vocab_size, 33, 8, seed=seed)
     sched = make_schedule("constant", base_lr=2e-3, warmup_steps=2,
                           total_steps=steps)
-    step = jax.jit(make_train_step(arch, cfg, sched))
+    if hasattr(cfg, "segments"):  # PrecisionSchedule ⇒ host dispatcher
+        step = make_scheduled_train_step(arch, cfg, sched)
+    else:
+        step = jax.jit(make_train_step(arch, cfg, sched))
     state = init_train_state(jax.random.key(0), arch, init_params)
     losses = []
     for i in range(steps):
@@ -62,5 +72,41 @@ def run(log=print):
     return rows
 
 
+def run_schedules(log=print, steps=60):
+    """Sweep precision-schedule shapes end-to-end (final-loss delta vs fp32).
+
+    Shapes: constant (static-format control), Accuracy-Boosters staircase
+    (narrow for ~2/3 of the run, widened at the end), warmup-then-narrow
+    (the transpose), and per-layer mixed precision (narrow body, 12-bit
+    lm_head override).
+    """
+    base = HBFPConfig(8, 16, tile=24)
+    shapes = [
+        ("const8", constant(base)),
+        ("stair4_8_16",
+         staircase(((0, 4), (steps * 2 // 3, 8), (steps * 5 // 6, 16)),
+                   base=base)),
+        ("warm12_narrow4",
+         warmup_then_narrow(12, 4, steps // 4, base=base)),
+        ("layerwise4_head12",
+         constant(base.with_(mantissa_bits=4),
+                  overrides=(("lm_head", 12),))),
+    ]
+    log("# Precision schedules (final-loss delta vs fp32)")
+    fp32 = _final_loss(None, steps=steps)
+    log(f"  fp32 baseline loss {fp32:.4f}")
+    rows = [("fp32", 0.0)]
+    for name, sched in shapes:
+        l = _final_loss(sched, steps=steps)
+        rows.append((name, l - fp32))
+        log(f"  {name:20s} {sched.name:32s} Δloss {l - fp32:+.4f}")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", action="store_true",
+                    help="sweep precision schedules instead of static formats")
+    args = ap.parse_args()
+    run_schedules() if args.schedule else run()

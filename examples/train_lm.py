@@ -55,8 +55,8 @@ def main():
     if trainer.start_step:
         print(f"resumed from checkpoint at step {trainer.start_step}")
     state, metrics = trainer.run(args.steps, log_every=25)
-    print(f"final: {', '.join(f'{k}={float(v):.4f}' "
-          f"for k, v in metrics.items())}")
+    print("final: " + ", ".join(f"{k}={float(v):.4f}"
+                                for k, v in metrics.items()))
 
 
 if __name__ == "__main__":

@@ -1,2 +1,3 @@
-from repro.checkpoint.checkpointing import (latest_step, load_checkpoint,
+from repro.checkpoint.checkpointing import (latest_step, latest_steps,
+                                            load_checkpoint, load_precision,
                                             save_checkpoint)

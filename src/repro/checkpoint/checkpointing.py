@@ -9,6 +9,10 @@ Design (DESIGN.md §6):
   * **compact**: HBFP weight matrices may be stored packed (int mantissa +
     per-tile exponent = the paper's "2× more compact models") with
     `packed=True`;
+  * **precision-aware**: `hbfp` may be a static HBFPConfig *or* a
+    `PrecisionSchedule`; the spec is serialized into `meta.json`
+    ("precision") and round-trips via `load_precision`, and packing resolves
+    the schedule at the checkpointed step (per-layer overrides included);
   * **async**: `save_checkpoint(..., background=True)` snapshots to host
     memory synchronously (cheap) and writes in a thread, overlapping I/O
     with the next training steps;
@@ -27,9 +31,26 @@ import numpy as np
 
 from repro.core import bfp
 from repro.core.formats import HBFPConfig
-from repro.core.opt_shell import is_hbfp_weight
+from repro.core.opt_shell import is_hbfp_weight, resolve_param_cfg
+from repro.core.schedule_precision import (PrecisionSchedule,
+                                           precision_from_dict,
+                                           precision_to_dict)
 
 _SEP = "."
+
+
+def _resolved_at(hbfp, step: int):
+    """Concrete per-parameter precision at `step`: HBFPConfig passes through,
+    a PrecisionSchedule resolves to its current segment."""
+    if isinstance(hbfp, PrecisionSchedule):
+        return hbfp.resolve_segment(hbfp.segment_index(step))
+    return hbfp
+
+
+def load_precision(meta: dict):
+    """Inverse of the meta.json "precision" entry: None, HBFPConfig, or
+    PrecisionSchedule (whatever was passed to save_checkpoint)."""
+    return precision_from_dict(meta.get("precision"))
 
 
 def _flatten(tree):
@@ -43,18 +64,22 @@ def _flatten(tree):
 
 
 def save_checkpoint(ckpt_dir: str, step: int, state, *,
-                    hbfp: Optional[HBFPConfig] = None, packed: bool = False,
+                    hbfp=None, packed: bool = False,
                     keep: int = 3, background: bool = False,
                     extra_meta: Optional[dict] = None):
     """Write `state` (any pytree) at `step`. Returns the final path (or the
-    Thread when background=True)."""
+    Thread when background=True). `hbfp`: Optional[HBFPConfig |
+    PrecisionSchedule] — serialized into meta and, with packed=True, used to
+    pack HBFP weights at this step's resolved widths."""
     os.makedirs(ckpt_dir, exist_ok=True)
     # snapshot to host synchronously — cheap relative to the write
     host = {k: np.asarray(v) for k, v in _flatten(state).items()}
     meta = {"step": int(step), "keys": sorted(host.keys()),
-            "packed": bool(packed)}
+            "packed": bool(packed),
+            "precision": precision_to_dict(hbfp)}
     if extra_meta:
         meta.update(extra_meta)
+    resolved = _resolved_at(hbfp, int(step))
 
     def write():
         tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
@@ -62,10 +87,11 @@ def save_checkpoint(ckpt_dir: str, step: int, state, *,
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
         for name, arr in host.items():
-            if packed and hbfp is not None and arr.ndim >= 2 \
+            c = resolve_param_cfg(resolved, name)
+            if packed and c is not None and arr.ndim >= 2 \
                     and is_hbfp_weight(name, arr):
-                p = bfp.pack(arr, hbfp.wide_mantissa_bits,
-                             bfp.weight_tile_shape(arr.ndim, hbfp.tile))
+                p = bfp.pack(arr, c.wide_mantissa_bits,
+                             bfp.weight_tile_shape(arr.ndim, c.tile))
                 np.savez(os.path.join(tmp, name + ".npz"),
                          mantissa=np.asarray(p.mantissa),
                          exponent=np.asarray(p.exponent),

@@ -66,6 +66,13 @@ class ArchConfig:
     loss_chunk: int = 2048     # CE chunking (0 = off); bounds f32 logits temp
     ssm_unroll: bool = False   # python-unroll SSD/mLSTM chunk scans (roofline)
     bfp_kv_cache: bool = False  # 8-bit BFP K/V cache (beyond-paper, serving)
+    # HBFP precision schedule (DESIGN.md §8). `hbfp_spec` is a
+    # schedule_precision.from_spec string ("8", "4@0,8@90%,16@95%", ...);
+    # None ⇒ the driver picks the format (paper default hbfp8_16).
+    # `hbfp_overrides` are per-layer (name-fragment, mantissa-width) pairs;
+    # width 0 ⇒ that parameter stays FP.
+    hbfp_spec: Optional[str] = None
+    hbfp_overrides: Tuple[Tuple[str, int], ...] = ()
 
     @property
     def hd(self) -> int:
@@ -109,6 +116,18 @@ class ArchConfig:
         D, F, L = self.d_model, self.d_ff, self.n_layers
         inactive = L * (self.n_experts - self.top_k) * 3 * D * F
         return self.n_params() - inactive
+
+    def precision_schedule(self, total_steps: Optional[int] = None):
+        """Build this arch's PrecisionSchedule from `hbfp_spec` /
+        `hbfp_overrides` (None if no spec is declared). %-based segment
+        starts need `total_steps`."""
+        if self.hbfp_spec is None:
+            return None
+        from repro.core.schedule_precision import from_spec
+        ovr = tuple((f, None if w == 0 else int(w))
+                    for f, w in self.hbfp_overrides)
+        return from_spec(self.hbfp_spec, total_steps=total_steps,
+                         overrides=ovr)
 
     def smoke(self) -> "ArchConfig":
         """Reduced same-family config for CPU smoke tests."""

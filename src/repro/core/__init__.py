@@ -1,6 +1,14 @@
 """HBFP core: the paper's contribution as composable JAX modules."""
-from repro.core.formats import HBFPConfig, HBFP8_16, HBFP12_16, HBFP8_16_T24, FP32
+from repro.core.formats import (HBFPConfig, HBFP8_16, HBFP12_16, HBFP8_16_T24,
+                                FP32, resolve)
 from repro.core import bfp
 from repro.core.hbfp_ops import hbfp_matmul, hbfp_linear, hbfp_conv2d
 from repro.core.opt_shell import (narrow_params, widen_params,
-                                  hbfp_apply_updates, is_hbfp_weight)
+                                  hbfp_apply_updates, is_hbfp_weight,
+                                  resolve_param_cfg)
+from repro.core.schedule_precision import (PrecisionSchedule,
+                                           ResolvedPrecision, as_schedule,
+                                           constant, staircase,
+                                           warmup_then_narrow, from_spec,
+                                           precision_to_dict,
+                                           precision_from_dict)

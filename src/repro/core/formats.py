@@ -81,6 +81,27 @@ class HBFPConfig:
         return dataclasses.replace(self, **kw)
 
 
+def resolve(spec, step: int = 0, layer_name: Optional[str] = None
+            ) -> Optional["HBFPConfig"]:
+    """Resolve a precision spec to the concrete HBFPConfig at (step, layer).
+
+    `spec` may be None (FP32), an HBFPConfig (static — the paper's setting),
+    or anything with a `.resolve(step, layer_name)` method, i.e. a
+    `schedule_precision.PrecisionSchedule` (duck-typed here to keep formats
+    import-free of the schedule module). Convenience API for tools and
+    experiments that hold an arbitrary spec; the train/checkpoint layers
+    resolve whole *segments* instead (`PrecisionSchedule.resolve_segment` /
+    `opt_shell.resolve_param_cfg`) so one compiled step sees one static
+    precision state.
+    """
+    if spec is None or isinstance(spec, HBFPConfig):
+        return spec
+    r = getattr(spec, "resolve", None)
+    if r is None:
+        raise TypeError(f"not a precision spec: {type(spec).__name__}")
+    return r(step, layer_name)
+
+
 # Paper's recommended configurations (§6 "sweet spot").
 HBFP8_16 = HBFPConfig(mantissa_bits=8, wide_mantissa_bits=16)
 HBFP12_16 = HBFPConfig(mantissa_bits=12, wide_mantissa_bits=16)

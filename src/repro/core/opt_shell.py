@@ -9,6 +9,12 @@ Here the persistent `params` pytree *is* the wide-BFP copy (so checkpoints
 hold the paper's compact weights), and `narrow_params` derives the compute
 copy inside the train step. Non-dot-product parameters (biases, norm scales,
 embeddings, routers) stay in FP — the hybrid in HBFP.
+
+Precision resolution (DESIGN.md §8): every entry point takes either a plain
+`HBFPConfig` (one format for every weight — the paper's setting) or a
+`schedule_precision.ResolvedPrecision` (per-layer overrides resolved for the
+current schedule segment); `resolve_param_cfg` maps (spec, parameter name) →
+the concrete config for that weight, `None` meaning "stays FP".
 """
 from __future__ import annotations
 
@@ -42,41 +48,45 @@ def _named_map(fn: Callable[[str, Any], Any], tree):
     return jax.tree_util.tree_map_with_path(visit, tree)
 
 
-def narrow_params(params, cfg: Optional[HBFPConfig],
-                  key: Optional[jax.Array] = None):
-    """Derive the narrow-mantissa compute copy used by fwd/bwd (paper §5.1)."""
+def resolve_param_cfg(cfg, name: str) -> Optional[HBFPConfig]:
+    """Concrete config for one parameter: HBFPConfig passes through; a
+    ResolvedPrecision (anything with `.for_param`) is asked per name."""
+    if cfg is None:
+        return None
+    fp = getattr(cfg, "for_param", None)
+    return fp(name) if fp is not None else cfg
+
+
+def _quantize_tree(params, cfg, key, wide: bool):
     if cfg is None:
         return params
 
     def q(name, leaf):
-        if not is_hbfp_weight(name, leaf):
+        c = resolve_param_cfg(cfg, name)
+        if c is None or not is_hbfp_weight(name, leaf):
             return leaf
         k = None
-        if key is not None and cfg.rounding == "stochastic":
+        if key is not None and c.rounding == "stochastic":
             k = jax.random.fold_in(key, hash(name) & 0x7FFFFFFF)
-        return bfp.quantize_weight(leaf, cfg, k, wide=False)
+        return bfp.quantize_weight(leaf, c, k, wide=wide)
 
     return _named_map(q, params)
 
 
-def widen_params(params, cfg: Optional[HBFPConfig],
-                 key: Optional[jax.Array] = None):
+def narrow_params(params, cfg, key: Optional[jax.Array] = None):
+    """Derive the narrow-mantissa compute copy used by fwd/bwd (paper §5.1).
+
+    `cfg`: HBFPConfig, ResolvedPrecision (per-layer widths), or None.
+    """
+    return _quantize_tree(params, cfg, key, wide=False)
+
+
+def widen_params(params, cfg, key: Optional[jax.Array] = None):
     """Round freshly-updated weights into the wide-BFP storage format."""
-    if cfg is None:
-        return params
-
-    def q(name, leaf):
-        if not is_hbfp_weight(name, leaf):
-            return leaf
-        k = None
-        if key is not None and cfg.rounding == "stochastic":
-            k = jax.random.fold_in(key, hash(name) & 0x7FFFFFFF)
-        return bfp.quantize_weight(leaf, cfg, k, wide=True)
-
-    return _named_map(q, params)
+    return _quantize_tree(params, cfg, key, wide=True)
 
 
-def hbfp_apply_updates(params, updates, cfg: Optional[HBFPConfig],
+def hbfp_apply_updates(params, updates, cfg,
                        key: Optional[jax.Array] = None):
     """params ← Q_wide(params + updates): FP32 update, wide-BFP storage."""
     new = jax.tree.map(lambda p, u: (p.astype(jnp.float32)

@@ -40,7 +40,8 @@ from repro.sharding.partitioning import (batch_specs, cache_specs,
                                          fwd_param_specs, master_param_specs,
                                          opt_state_specs)
 from repro.train import init_train_state, make_train_step
-from repro.analysis.roofline import collective_bytes_from_text, roofline_terms
+from repro.analysis.roofline import (collective_bytes_from_text,
+                                     cost_analysis_dict, roofline_terms)
 
 SHAPES = {
     "train_4k":    dict(kind="train",   seq=4096,   batch=256),
@@ -205,7 +206,7 @@ def build_cell(arch: ArchConfig, shape_name: str, mesh,
         return jax.jit(prefill_fn), (params_s, batch_s)
 
     # decode: KV caches are sequence-sharded over `model` when kv-heads
-    # don't divide it (flash-decoding layout, DESIGN.md §6 SP)
+    # don't divide it (flash-decoding layout, DESIGN.md §2)
     if opts.get("bfp_cache"):
         arch = dataclasses.replace(arch, bfp_kv_cache=True)
     params_s = _serving_params_struct(arch, mesh)
@@ -291,7 +292,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
                                      ssm_unroll=True, ssm_chunk=ssm_chunk)
             fn, args = build_cell(a2, shape_name, mesh, hbfp, opts)
             compiled = fn.lower(*args).compile()
-            ca = compiled.cost_analysis()
+            ca = cost_analysis_dict(compiled)
             coll = collective_bytes_from_text(compiled.as_text())
             costs[L] = {"flops": float(ca.get("flops", 0.0)),
                         "bytes": float(ca.get("bytes accessed", 0.0)),

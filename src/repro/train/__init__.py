@@ -1,2 +1,4 @@
-from repro.train.train_step import TrainState, init_train_state, make_train_step
+from repro.train.train_step import (TrainState, init_train_state,
+                                    make_train_step,
+                                    make_scheduled_train_step)
 from repro.train.serve_step import make_decode_fn, make_prefill_fn

@@ -16,18 +16,22 @@ Distribution notes (beyond-paper, DESIGN.md §2):
   * gradient accumulation via lax.scan over microbatches;
   * optional BFP-compressed gradient all-reduce (grad_compress.py) for the
     shard_map DP path.
+
+Precision schedules (DESIGN.md §8): `make_train_step` builds ONE compiled
+step for ONE static precision state; `make_scheduled_train_step` wraps it
+into a host-side dispatcher that compiles one variant per schedule segment.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.formats import HBFPConfig
 from repro.core.opt_shell import hbfp_apply_updates, narrow_params
+from repro.core.schedule_precision import ResolvedPrecision, as_schedule
 from repro.models.layers import Ctx
 from repro.models.transformer import loss_fn
 from repro.optim.adamw import OptState, adamw_init, adamw_update
@@ -47,8 +51,7 @@ def init_train_state(key, arch: ArchConfig, init_params_fn) -> TrainState:
                       step=jnp.zeros((), jnp.int32))
 
 
-def make_train_step(arch: ArchConfig, hbfp: Optional[HBFPConfig],
-                    schedule, *, grad_accum: int = 1,
+def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
                     fwd_constraint=None, grad_constraint=None,
                     act_constraint=None, shard_fn=None,
                     weight_decay: float = 0.1,
@@ -56,6 +59,10 @@ def make_train_step(arch: ArchConfig, hbfp: Optional[HBFPConfig],
                     accum_unroll: bool = False):
     """Returns train_step(state, batch, key) -> (state, metrics).
 
+    hbfp: the precision for this compiled step — None (fp32), a static
+    HBFPConfig (the paper's setting), or a ResolvedPrecision (one schedule
+    segment with per-layer weight overrides; produced by
+    make_scheduled_train_step — all pytree-static under jit).
     fwd_constraint: optional fn(params_pytree) -> params_pytree applying
     with_sharding_constraint for the TP-only fwd copy (set by the launcher;
     identity on single device).
@@ -66,10 +73,26 @@ def make_train_step(arch: ArchConfig, hbfp: Optional[HBFPConfig],
     constraint (threaded through Ctx into the layer scan).
     """
     compute_dtype = jnp.dtype(arch.dtype)
-    if hbfp is not None:
+    # `hbfp` may be a plain HBFPConfig (static, paper setting) or a
+    # ResolvedPrecision (one schedule segment, possibly with per-layer weight
+    # overrides). Split it into the in-graph activation config and the
+    # weight-tree resolver; both are static under jit.
+    if isinstance(hbfp, ResolvedPrecision):
+        if hbfp.is_fp32:
+            hbfp = None
+    if isinstance(hbfp, ResolvedPrecision):
+        act_cfg = None if hbfp.global_cfg is None else \
+            hbfp.global_cfg.with_(requantize_weights=False)
+        param_cfg = hbfp
+        stochastic = hbfp.any_stochastic
+    elif hbfp is not None:
         # weights are narrowed once per step by narrow_params below —
         # skip the (idempotent) per-matmul weight re-quantization
-        hbfp = hbfp.with_(requantize_weights=False)
+        act_cfg = param_cfg = hbfp.with_(requantize_weights=False)
+        stochastic = hbfp.rounding == "stochastic"
+    else:
+        act_cfg = param_cfg = None
+        stochastic = False
 
     def cast(p):
         def one(x):
@@ -79,14 +102,14 @@ def make_train_step(arch: ArchConfig, hbfp: Optional[HBFPConfig],
         return jax.tree.map(one, p)
 
     def loss_at(narrow, batch, key):
-        ctx = Ctx(hbfp, key, compute_dtype, act_constraint, shard_fn)
+        ctx = Ctx(act_cfg, key, compute_dtype, act_constraint, shard_fn)
         return loss_fn(narrow, batch, arch, ctx)
 
     def train_step(state: TrainState, batch, key):
         nkey = None
-        if hbfp is not None and hbfp.rounding == "stochastic":
+        if stochastic:
             nkey = jax.random.fold_in(key, 0x5EED)
-        narrow = narrow_params(state.params, hbfp, nkey)
+        narrow = narrow_params(state.params, param_cfg, nkey)
         narrow = cast(narrow)
         if fwd_constraint is not None:
             narrow = fwd_constraint(narrow)
@@ -122,10 +145,60 @@ def make_train_step(arch: ArchConfig, hbfp: Optional[HBFPConfig],
         updates, opt = adamw_update(grads, state.opt, state.params,
                                     lr=schedule, weight_decay=weight_decay,
                                     grad_clip=grad_clip)
-        params = hbfp_apply_updates(state.params, updates, hbfp, key)
+        params = hbfp_apply_updates(state.params, updates, param_cfg, key)
         metrics = dict(metrics)
         metrics["lr"] = schedule(opt.step) if callable(schedule) \
             else jnp.asarray(schedule)
         return TrainState(params, opt, state.step + 1), metrics
 
+    return train_step
+
+
+def make_scheduled_train_step(arch: ArchConfig, precision, schedule, *,
+                              jit_compile: bool = True, donate: bool = False,
+                              **kwargs):
+    """Train step driven by a `PrecisionSchedule` (DESIGN.md §8).
+
+    Returns `train_step(state, batch, key) -> (state, metrics)` — a *host*
+    dispatcher: the schedule is a finite table, so each segment gets its own
+    jit-compiled variant (built lazily, at most `num_segments` compilations)
+    and the current variant is picked from the host value of `state.step`.
+    Inside every compiled step the HBFPConfig stays pytree-static, exactly
+    like the static path; with a constant schedule the computation is
+    bit-identical to `make_train_step(arch, cfg, ...)` (regression-tested).
+
+    `precision` may be a PrecisionSchedule, an HBFPConfig, or None (the
+    latter two are coerced to a one-segment schedule). `metrics` gains a
+    "mantissa_bits" entry (0 for FP32 segments). Extra kwargs are forwarded
+    to `make_train_step`.
+    """
+    psched = as_schedule(precision)
+    variants = {}
+
+    def variant(i: int):
+        fn = variants.get(i)
+        if fn is None:
+            fn = make_train_step(arch, psched.resolve_segment(i), schedule,
+                                 **kwargs)
+            if jit_compile:
+                fn = jax.jit(fn, donate_argnums=(0,) if donate else ())
+            variants[i] = fn
+        return fn
+
+    single = psched.num_segments == 1
+
+    def train_step(state: TrainState, batch, key):
+        # int(state.step) blocks on the previous step's output (a host sync
+        # per step) — skip the lookup entirely for one-segment schedules so
+        # the constant path keeps JAX's async dispatch.
+        i = 0 if single else psched.segment_index(int(state.step))
+        cfg = psched.segments[i][1]
+        state, metrics = variant(i)(state, batch, key)
+        metrics = dict(metrics)
+        metrics["mantissa_bits"] = jnp.asarray(
+            0 if cfg is None else cfg.mantissa_bits, jnp.float32)
+        return state, metrics
+
+    train_step.schedule = psched
+    train_step.variants = variants  # exposed for tests / compile accounting
     return train_step

@@ -11,7 +11,12 @@ Behaviours (exercised by tests/test_trainer.py):
     shardings (node-loss → restart on a smaller/larger mesh);
   * straggler note: steps are synchronous SPMD — mitigation at this layer is
     restart-based (checkpoint elasticity) plus the data pipeline's
-    statelessness; see README §fault-tolerance.
+    statelessness; see README §fault-tolerance;
+  * precision schedules: `hbfp` may be a static HBFPConfig or a
+    PrecisionSchedule (pair with train_step.make_scheduled_train_step — the
+    step fn dispatches on state.step, so resume lands in the right schedule
+    segment automatically); the spec is stored in checkpoint meta and
+    packed checkpoints use the widths resolved at the checkpointed step.
 """
 from __future__ import annotations
 
@@ -28,7 +33,9 @@ from repro.train.train_step import TrainState
 class Trainer:
     def __init__(self, *, train_step: Callable, init_state: TrainState,
                  data_fn: Callable[[int], Any], ckpt_dir: Optional[str],
-                 ckpt_every: int = 50, keep: int = 3, hbfp=None,
+                 ckpt_every: int = 50, keep: int = 3,
+                 hbfp=None,  # HBFPConfig | PrecisionSchedule | None
+
                  seed: int = 0, background_ckpt: bool = False,
                  state_shardings=None):
         self.train_step = train_step

@@ -1,0 +1,82 @@
+"""Hypothesis property tests of the BFP quantizer.
+
+`hypothesis` is an optional dev dependency (pyproject `[dev]` extra); this
+module skips cleanly when it isn't installed. The deterministic BFP tests
+live in tests/test_bfp.py and always run.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+from hypothesis.extra import numpy as hnp
+
+from repro.core import bfp
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+FINITE = hnp.arrays(
+    np.float32, hnp.array_shapes(min_dims=2, max_dims=3, min_side=1,
+                                 max_side=17),
+    elements=st.floats(np.float32(-1e20), np.float32(1e20), width=32,
+                       allow_nan=False, allow_infinity=False))
+
+
+def _tile_for(x, tile):
+    return (1,) * (x.ndim - 1) + (tile,)
+
+
+@given(FINITE, st.sampled_from([4, 8, 12, 16]),
+       st.sampled_from([None, 2, 8, 24]))
+def test_idempotent(x, m, tile):
+    """Q(Q(x)) == Q(x) bit-exactly (round-to-nearest)."""
+    q1 = bfp.quantize(jnp.asarray(x), m, _tile_for(x, tile))
+    q2 = bfp.quantize(q1, m, _tile_for(x, tile))
+    assert jnp.array_equal(q1, q2), (q1 - q2)
+
+
+@given(FINITE, st.sampled_from([4, 8, 12]))
+def test_error_bound(x, m):
+    """|x - Q(x)| <= delta/2 per element (nearest, no saturation edge)."""
+    xt = jnp.asarray(x)
+    tile = _tile_for(x, None)
+    q = bfp.quantize(xt, m, tile)
+    delta = bfp.tile_scales(xt, m, tile)
+    # elements can saturate only within delta of the tile max boundary
+    lim = (2 ** (m - 1) - 1) * delta
+    inside = jnp.abs(xt) <= lim
+    err = jnp.abs(q - xt)
+    assert bool(jnp.all(jnp.where(inside, err <= delta / 2 + 1e-30, True)))
+
+
+@given(FINITE)
+def test_zero_and_sign_preservation(x):
+    q = bfp.quantize(jnp.asarray(x), 8, _tile_for(x, None))
+    assert bool(jnp.all(jnp.where(x == 0, q == 0, True)))
+    assert bool(jnp.all(q * x >= 0))  # no sign flips
+
+
+@given(FINITE, st.sampled_from([8, 12]), st.sampled_from([None, 8]))
+def test_pack_unpack_matches_quantize(x, m, tile):
+    xt = jnp.asarray(x)
+    ts = _tile_for(x, tile)
+    p = bfp.pack(xt, m, ts)
+    assert jnp.array_equal(bfp.unpack(p), bfp.quantize(xt, m, ts))
+    # mantissas within signed range
+    lim = 2 ** (m - 1) - 1
+    assert int(jnp.abs(p.mantissa.astype(jnp.int32)).max()) <= lim
+
+
+@given(st.integers(bfp.EXP_FLOOR + 5, 119))
+def test_powers_of_two_exact(e):
+    """Powers of two are exactly representable at any mantissa width
+    (within the documented exponent clamp range)."""
+    x = jnp.asarray([[2.0 ** e, -(2.0 ** e)]], jnp.float32)
+    q = bfp.quantize(x, 4, (1, None))
+    assert jnp.array_equal(q, x)

@@ -1,0 +1,199 @@
+"""Precision-schedule subsystem (DESIGN.md §8): boundary resolution,
+per-layer overrides, bit-identity of the constant schedule with the static
+HBFPConfig path, and checkpoint meta round-trips."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import load_checkpoint, load_precision, save_checkpoint
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig
+from repro.core import (HBFPConfig, bfp, as_schedule, constant, from_spec,
+                        narrow_params, precision_from_dict, precision_to_dict,
+                        resolve, staircase, warmup_then_narrow)
+from repro.core.schedule_precision import PrecisionSchedule
+from repro.data import SyntheticLM
+from repro.models import init_params
+from repro.optim import make_schedule
+from repro.train import (init_train_state, make_scheduled_train_step,
+                         make_train_step)
+
+
+def test_staircase_boundary_resolution():
+    """The staircase resolves the right width exactly at segment boundaries."""
+    s = staircase(((0, 4), (10, 8), (20, 16)), base=HBFPConfig(8, 16, tile=24))
+    assert s.boundaries() == (0, 10, 20)
+    for step, want in ((0, 4), (9, 4), (10, 8), (19, 8), (20, 16),
+                       (10 ** 9, 16)):
+        assert s.resolve(step).mantissa_bits == want, step
+    # widths came from the base: tile and wide storage are preserved
+    assert s.resolve(0).tile == 24 and s.resolve(0).wide_mantissa_bits == 16
+    # formats.resolve is the same lookup for any spec kind
+    assert resolve(s, 15).mantissa_bits == 8
+    assert resolve(HBFPConfig(12, 16), 15).mantissa_bits == 12
+    assert resolve(None, 15) is None
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        PrecisionSchedule(segments=())
+    with pytest.raises(ValueError):
+        PrecisionSchedule(segments=((5, None),))          # must start at 0
+    with pytest.raises(ValueError):
+        staircase(((0, 4), (10, 8), (10, 16)))            # dup boundary
+
+
+def test_per_layer_override_beats_global():
+    s = constant(HBFPConfig(4, 16), overrides=(("lm_head", 12),
+                                               ("embed", None)))
+    assert s.resolve(0, "blocks/ffn_w").mantissa_bits == 4
+    assert s.resolve(0, "lm_head").mantissa_bits == 12
+    assert s.resolve(0, "tok_embed") is None
+    # ...and the optimizer shell actually applies it to the weight tree
+    k = jax.random.key(0)
+    params = {"ffn_w": jax.random.normal(k, (32, 64)),
+              "lm_head": jax.random.normal(jax.random.fold_in(k, 1),
+                                           (64, 128))}
+    rp = s.resolve_segment(0)
+    narrow = narrow_params(params, rp)
+    assert jnp.array_equal(
+        narrow["ffn_w"], bfp.quantize_weight(params["ffn_w"],
+                                             HBFPConfig(4, 16)))
+    assert jnp.array_equal(
+        narrow["lm_head"], bfp.quantize_weight(params["lm_head"],
+                                               HBFPConfig(12, 16)))
+    # 4-bit body really is coarser than the 12-bit head
+    assert not jnp.array_equal(
+        narrow["lm_head"], bfp.quantize_weight(params["lm_head"],
+                                               HBFPConfig(4, 16)))
+
+
+def test_bare_width_override_follows_segment_base():
+    """A bare-int override merges into each segment's config (tile/rounding
+    follow the segment) and stays FP during FP32 segments; an explicit
+    HBFPConfig override applies even there."""
+    base = HBFPConfig(8, 16, tile=24)
+    s = from_spec("fp32@0,8@100", base=base,
+                  overrides=(("lm_head", 12),))
+    assert s.resolve(0, "lm_head") is None          # fp32 segment: stays FP
+    assert s.resolve_segment(0).is_fp32             # fast path intact
+    c = s.resolve(100, "lm_head")
+    assert c.mantissa_bits == 12 and c.tile == 24   # segment grid preserved
+    explicit = constant(None, overrides=(("lm_head", HBFPConfig(12, 16)),))
+    assert explicit.resolve(0, "lm_head").mantissa_bits == 12
+
+
+def test_override_none_keeps_param_fp():
+    s = constant(HBFPConfig(8, 16), overrides=(("lm_head", None),))
+    params = {"lm_head": jax.random.normal(jax.random.key(2), (16, 32))}
+    narrow = narrow_params(params, s.resolve_segment(0))
+    assert jnp.array_equal(narrow["lm_head"], params["lm_head"])
+
+
+def test_from_spec_dsl():
+    s = from_spec("4@0,8@90%,16@95%", total_steps=1000)
+    assert s.boundaries() == (0, 900, 950)
+    assert [c.mantissa_bits for _, c in s.segments] == [4, 8, 16]
+    s2 = from_spec("12@0,4@200~stochastic")
+    assert s2.segments[1][1].rounding == "stochastic"
+    assert s2.segments[0][1].rounding == "nearest"
+    s3 = from_spec("fp32@0,8@10")
+    assert s3.resolve(5) is None and s3.resolve(10).mantissa_bits == 8
+    with pytest.raises(ValueError):
+        from_spec("8@50%")  # %-steps need total_steps
+    with pytest.raises(ValueError, match="explicit @START"):
+        from_spec("4,8")    # non-first segment must say where it starts
+    # arch configs carry a spec + overrides
+    arch = get_arch("yi-9b").smoke()
+    assert arch.precision_schedule(100) is None  # no spec declared
+    import dataclasses
+    arch = dataclasses.replace(arch, hbfp_spec="4@0,8@90%",
+                               hbfp_overrides=(("lm_head", 12),))
+    ps = arch.precision_schedule(100)
+    assert ps.boundaries() == (0, 90)
+    assert ps.resolve(0, "lm_head").mantissa_bits == 12
+
+
+def test_constant_schedule_bit_identical_to_static():
+    """Acceptance: a constant-m schedule reproduces the static
+    HBFPConfig(mantissa_bits=m) path bit-for-bit (params and losses)."""
+    arch = get_arch("yi-9b").smoke()
+    pipe = SyntheticLM(arch.vocab_size, 17, 4, seed=3)
+    lrs = make_schedule("constant", base_lr=2e-3, warmup_steps=2,
+                        total_steps=10)
+    cfg = HBFPConfig(8, 16)
+    static = jax.jit(make_train_step(arch, cfg, lrs))
+    sched = make_scheduled_train_step(arch, constant(cfg), lrs)
+    s1 = init_train_state(jax.random.key(0), arch, init_params)
+    s2 = init_train_state(jax.random.key(0), arch, init_params)
+    for i in range(4):
+        k = jax.random.fold_in(jax.random.key(1), i)
+        s1, m1 = static(s1, pipe.batch(i), k)
+        s2, m2 = sched(s2, pipe.batch(i), k)
+        assert float(m1["loss"]) == float(m2["loss"]), i
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        assert jnp.array_equal(a, b)
+    assert len(sched.variants) == 1  # one segment ⇒ one compiled variant
+
+
+def test_staircase_run_switches_width_and_compiles_per_segment():
+    arch = get_arch("yi-9b").smoke()
+    pipe = SyntheticLM(arch.vocab_size, 17, 4, seed=5)
+    lrs = make_schedule("constant", base_lr=1e-3, warmup_steps=1,
+                        total_steps=8)
+    st = make_scheduled_train_step(arch, staircase(((0, 4), (2, 8), (4, 16))),
+                                   lrs)
+    s = init_train_state(jax.random.key(0), arch, init_params)
+    widths = []
+    for i in range(6):
+        s, m = st(s, pipe.batch(i), jax.random.fold_in(jax.random.key(1), i))
+        widths.append(int(float(m["mantissa_bits"])))
+        assert jnp.isfinite(m["loss"])
+    assert widths == [4, 4, 8, 8, 16, 16]
+    assert len(st.variants) == 3  # one compile per segment, not per step
+
+
+def test_schedule_roundtrips_through_checkpoint(tmp_path):
+    sched = staircase(((0, 4), (30, 8), (40, 16)),
+                      base=HBFPConfig(8, 16, tile=24),
+                      overrides=(("lm_head", 12), ("gate", None)))
+    # pure dict round-trip (meta.json payload)
+    import json
+    assert precision_from_dict(
+        json.loads(json.dumps(precision_to_dict(sched)))) == sched
+    # through an actual checkpoint
+    state = {"w": jnp.ones((8, 8))}
+    save_checkpoint(str(tmp_path), 7, state, hbfp=sched)
+    _, meta = load_checkpoint(str(tmp_path), state)
+    assert load_precision(meta) == sched
+    # static configs and fp32 round-trip too
+    save_checkpoint(str(tmp_path), 8, state, hbfp=HBFPConfig(12, 16))
+    _, meta = load_checkpoint(str(tmp_path), state, step=8)
+    assert load_precision(meta) == HBFPConfig(12, 16)
+    save_checkpoint(str(tmp_path), 9, state, hbfp=None)
+    _, meta = load_checkpoint(str(tmp_path), state, step=9)
+    assert load_precision(meta) is None
+
+
+def test_packed_checkpoint_uses_resolved_width(tmp_path):
+    """Packed checkpoints of a scheduled run pack at the *current* segment's
+    wide width (and skip override-FP params)."""
+    sched = warmup_then_narrow(16, 8, 10, base=HBFPConfig(8, 8))
+    w = jax.random.normal(jax.random.key(0), (64, 64))
+    # step 20 ⇒ narrow segment (wide storage 8 bits ⇒ int8 mantissas)
+    save_checkpoint(str(tmp_path / "n"), 20, {"w": w}, hbfp=sched,
+                    packed=True)
+    restored, _ = load_checkpoint(str(tmp_path / "n"), {"w": w}, step=20)
+    cfg20 = sched.resolve(20)
+    assert jnp.array_equal(
+        restored["w"], bfp.quantize_weight(w, cfg20, wide=True))
+
+
+def test_as_schedule_coercion():
+    assert as_schedule(None).resolve(0) is None
+    c = as_schedule(HBFPConfig(8, 16))
+    assert c.num_segments == 1 and c.resolve(123).mantissa_bits == 8
+    s = staircase(((0, 4), (5, 8)))
+    assert as_schedule(s) is s
+    with pytest.raises(TypeError):
+        as_schedule("hbfp8_16")

@@ -1,5 +1,6 @@
 """Sharding rules (pure spec logic — no multi-device requirement) plus an
 8-device subprocess test of the compressed DP all-reduce."""
+import os
 import subprocess
 import sys
 
@@ -121,9 +122,13 @@ from jax.sharding import PartitionSpec as P
 from functools import partial
 from repro.core.grad_compress import compressed_psum_tree
 mesh = jax.make_mesh((8,), ('data',))
+if hasattr(jax, 'shard_map'):           # jax >= 0.5
+    smap = partial(jax.shard_map, check_vma=False)
+else:                                   # jax 0.4.x
+    from jax.experimental.shard_map import shard_map
+    smap = partial(shard_map, check_rep=False)
 g = {'w': jax.random.normal(jax.random.key(0), (8, 64, 128))}
-@partial(jax.shard_map, mesh=mesh, in_specs=P('data'), out_specs=P(None),
-         check_vma=False)
+@partial(smap, mesh=mesh, in_specs=P('data'), out_specs=P(None))
 def red(gs):
     gs = jax.tree.map(lambda x: x[0], gs)
     out, _ = compressed_psum_tree(gs, 'data')
@@ -136,10 +141,14 @@ txt = jax.jit(red).lower(g).compile().as_text()
 assert 's8[' in txt and 'all-gather' in txt  # int8 wire format
 print('OK', rel)
 """
+    # inherit the full environment: XLA backend init can hang on a stripped
+    # env (observed with --xla_force_host_platform_device_count on CPU)
     r = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
-        env={"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-             "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo", timeout=300)
+        env={**os.environ,
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "JAX_PLATFORMS": "cpu", "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=300)
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout

@@ -1,0 +1,51 @@
+#!/usr/bin/env python3
+"""Docs link-check: every relative path referenced by README.md / docs/
+must exist in the repo (CI gate; also run by tests/test_docs.py).
+
+Checks markdown links `[text](path)` and backticked repo paths like
+`src/repro/core/bfp.py`. External URLs and anchors are ignored.
+"""
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", "docs/DESIGN.md", "ROADMAP.md"]
+_TOP = ("src/", "tests/", "benchmarks/", "examples/", "docs/", "tools/")
+
+
+def referenced_paths(text):
+    out = set()
+    for m in re.finditer(r"\[[^\]]*\]\(([^)#\s]+)\)", text):
+        t = m.group(1)
+        if not t.startswith(("http://", "https://", "mailto:")):
+            out.add(t)
+    for m in re.finditer(r"`([A-Za-z0-9_./-]+)`", text):
+        t = m.group(1)
+        if t.startswith(_TOP) and ("/" in t):
+            out.add(t)
+    return out
+
+
+def main() -> int:
+    missing = []
+    for doc in DOCS:
+        p = os.path.join(ROOT, doc)
+        if not os.path.exists(p):
+            missing.append((doc, "(document itself missing)"))
+            continue
+        with open(p) as f:
+            text = f.read()
+        for ref in sorted(referenced_paths(text)):
+            if not os.path.exists(os.path.join(ROOT, ref)):
+                missing.append((doc, ref))
+    if missing:
+        for doc, ref in missing:
+            print(f"BROKEN: {doc} -> {ref}")
+        return 1
+    print(f"docs link-check OK ({', '.join(DOCS)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
