@@ -1,0 +1,96 @@
+"""Telemetry-overhead benchmark (DESIGN.md §9 cadence/overhead model).
+
+Times the compiled train step with and without the numerics-observatory
+taps and reports the overhead of running telemetry every step (cadence 1)
+and amortized at cadence 100 (99 plain steps + 1 telemetry step per 100).
+Because off-cadence steps ARE the unmodified step (the adaptive dispatcher
+swaps whole jit variants), the amortized model is exact, not an estimate.
+
+Results are appended to the CSV summary by benchmarks/run.py and recorded
+to BENCH_numerics.json at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.numerics_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import get_arch
+from repro.core import HBFPConfig
+from repro.data import SyntheticLM
+from repro.models import init_params
+from repro.numerics import TapConfig
+from repro.optim import make_schedule
+from repro.train import init_train_state, make_train_step
+
+_OUT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_numerics.json")
+
+
+def run(log=print):
+    arch = get_arch("yi-9b").smoke()
+    pipe = SyntheticLM(arch.vocab_size, 33, 8, seed=0)
+    lrs = make_schedule("constant", base_lr=1e-3, warmup_steps=2,
+                        total_steps=100)
+    base = HBFPConfig(8, 16)
+    state = init_train_state(jax.random.key(0), arch, init_params)
+    batch = pipe.batch(0)
+    key = jax.random.key(1)
+
+    fns = {"plain": jax.jit(make_train_step(arch, base, lrs)),
+           "telemetry": jax.jit(make_train_step(arch, base, lrs,
+                                                taps=TapConfig()))}
+
+    def once(fn):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(state, batch, key)[0].params)
+        return (time.perf_counter() - t0) * 1e6
+
+    for fn in fns.values():  # compile + warm
+        once(fn), once(fn)
+    # interleaved min-of-rounds: robust to CPU contention in shared
+    # containers (both variants see the same background load; the min
+    # approximates the uncontended step)
+    best = {k: float("inf") for k in fns}
+    for _ in range(16):
+        for k, fn in fns.items():
+            best[k] = min(best[k], min(once(fn) for _ in range(3)))
+    us_plain = best["plain"]
+    us_tap = best["telemetry"]
+    cad1 = us_tap / us_plain - 1.0
+    cad100 = (99 * us_plain + us_tap) / (100 * us_plain) - 1.0
+    log(f"plain step      : {us_plain:9.0f} us")
+    log(f"telemetry step  : {us_tap:9.0f} us  "
+        f"(weights+grads+acts taps fused into the jit step)")
+    log(f"overhead cadence=1  : {cad1 * 100:6.2f}%   "
+        f"(target < 3% at production scale; smoke-scale steps are "
+        f"fixed-overhead-dominated, so this upper-bounds the real cost)")
+    log(f"overhead cadence=100: {cad100 * 100:6.3f}%  (target ~ 0%)")
+
+    record = {"arch": arch.name + "-smoke", "backend": jax.default_backend(),
+              "step_us_plain": round(us_plain, 1),
+              "step_us_telemetry": round(us_tap, 1),
+              "overhead_cadence_1": round(cad1, 4),
+              "overhead_cadence_100": round(cad100, 5),
+              "taps": {"weights": True, "grads": True, "acts": True},
+              "note": "off-cadence steps are the unmodified jit variant, so "
+                      "cadence-100 amortization is exact; the cadence-1 "
+                      "figure is measured at CPU smoke scale where fixed "
+                      "per-op overheads dominate a ~50ms step — it bounds, "
+                      "not represents, the production-scale cost"}
+    with open(_OUT, "w") as f:
+        json.dump(record, f, indent=1)
+    log(f"recorded -> {_OUT}")
+
+    return [("step_us_plain", us_plain, 0),
+            ("step_us_telemetry", us_tap, 0),
+            ("overhead_cadence_1_pct", cad1 * 100, 1),
+            ("overhead_cadence_100_pct", cad100 * 100, 1)]
+
+
+if __name__ == "__main__":
+    run()

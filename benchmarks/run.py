@@ -13,9 +13,9 @@ def main() -> None:
                     help="substring filter on benchmark module name")
     args = ap.parse_args()
 
-    from benchmarks import (design_space, kernel_bench, table1_narrow_fp,
-                            table2_image_cls, table3_lstm_lm,
-                            throughput_model)
+    from benchmarks import (design_space, kernel_bench, numerics_bench,
+                            table1_narrow_fp, table2_image_cls,
+                            table3_lstm_lm, throughput_model)
     suites = [
         ("table1_narrow_fp", table1_narrow_fp),
         ("table2_image_cls", table2_image_cls),
@@ -23,6 +23,7 @@ def main() -> None:
         ("design_space", design_space),
         ("throughput_model", throughput_model),
         ("kernel_bench", kernel_bench),
+        ("numerics_overhead", numerics_bench),
     ]
     csv = ["name,value,derived"]
     for name, mod in suites:

@@ -1,6 +1,8 @@
-"""Render dryrun.json into the EXPERIMENTS.md tables.
+"""Render dryrun.json into the EXPERIMENTS.md tables, and numerics-
+observatory dumps (DESIGN.md §9) into per-layer fidelity + decision tables.
 
     PYTHONPATH=src python -m repro.analysis.report results/dryrun.json
+    PYTHONPATH=src python -m repro.analysis.report --numerics results/numerics.json
 """
 import json
 import sys
@@ -61,7 +63,59 @@ def roofline_table(results):
     return "\n".join(lines) + tail
 
 
+def numerics_table(snapshot, widths=None):
+    """Per-layer fidelity table from one telemetry snapshot (the
+    `{source: {layer: stats}}` dict a `RingBuffer` entry holds; see
+    `numerics.stats.stats_to_host`)."""
+    lines = ["| layer | bits | source | SQNR dB | clip frac | sat tiles | "
+             "FTZ frac | exp spread |",
+             "|---|---|---|---|---|---|---|---|"]
+    for source in ("weights", "grads", "acts"):
+        for layer, s in sorted(snapshot.get(source, {}).items()):
+            bits = "-" if widths is None else widths.get(layer, widths.get(
+                "__base__", "-"))
+            lines.append(
+                f"| {layer} | {bits} | {source} | {s['sqnr_db']:.1f} | "
+                f"{s['clip_frac']:.2e} | {s.get('sat_tile_frac', 0.0):.3f} | "
+                f"{s['ftz_frac']:.3f} | {s['exp_spread']:.0f} |")
+    return "\n".join(lines)
+
+
+def decision_table(log):
+    """Render a controller decision log (`PrecisionController.log` /
+    checkpoint meta "numerics_controller"."log")."""
+    if not log:
+        return "(no decisions)"
+    lines = ["| step | layer | action | from | to | reason | SQNR dB | "
+             "clip |", "|---|---|---|---|---|---|---|---|"]
+    for d in log:
+        lines.append(f"| {d['step']} | {d['layer']} | {d['action']} | "
+                     f"{d['from']} | {d['to']} | {d['reason']} | "
+                     f"{d['sqnr_db']:.1f} | {d['clip_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def render_numerics(path):
+    """`path`: JSON with {"snapshot": {...}, "controller": to_meta() dump}
+    (what examples/adaptive_precision.py writes)."""
+    with open(path) as f:
+        dump = json.load(f)
+    ctrl = dump.get("controller", {})
+    widths = dict(ctrl.get("widths", {}))
+    widths["__base__"] = ctrl.get("base_bits", "-")
+    step = dump.get("step")
+    print(f"### Per-layer numerics{'' if step is None else f' @ step {step}'}"
+          "\n")
+    print(numerics_table(dump.get("snapshot") or {}, widths))
+    print("\n### Controller decision log\n")
+    print(decision_table(ctrl.get("log", [])))
+
+
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--numerics":
+        render_numerics(sys.argv[2] if len(sys.argv) > 2
+                        else "results/numerics.json")
+        return
     path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
     with open(path) as f:
         results = json.load(f)

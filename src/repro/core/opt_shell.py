@@ -18,6 +18,7 @@ the concrete config for that weight, `None` meaning "stays FP".
 """
 from __future__ import annotations
 
+import zlib
 from typing import Any, Callable, Optional
 
 import jax
@@ -40,12 +41,29 @@ def is_hbfp_weight(path: str, leaf) -> bool:
     return not any(f in lname for f in FP_NAME_FRAGMENTS)
 
 
+def param_path_name(path) -> str:
+    """Canonical '/'-joined name for a tree_flatten_with_path key path.
+
+    Every producer of parameter names (this shell, the numerics taps) must
+    build them through here: the controller emits these names back as
+    exact-match ResolvedPrecision overrides, so a byte-level divergence
+    would silently stop decisions from matching any parameter."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
 def _named_map(fn: Callable[[str, Any], Any], tree):
     def visit(p, leaf):
-        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in p)
-        return fn(name, leaf)
+        return fn(param_path_name(p), leaf)
     return jax.tree_util.tree_map_with_path(visit, tree)
+
+
+def param_fold(key, name: str):
+    """Per-parameter PRNG stream: fold a process-independent hash of the
+    parameter name into `key`. crc32, NOT Python's hash() — the latter is
+    salted per process (PYTHONHASHSEED), which would break bit-exact
+    stochastic-rounding replay across checkpoint restarts."""
+    return jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
 
 
 def resolve_param_cfg(cfg, name: str) -> Optional[HBFPConfig]:
@@ -67,7 +85,7 @@ def _quantize_tree(params, cfg, key, wide: bool):
             return leaf
         k = None
         if key is not None and c.rounding == "stochastic":
-            k = jax.random.fold_in(key, hash(name) & 0x7FFFFFFF)
+            k = param_fold(key, name)
         return bfp.quantize_weight(leaf, c, k, wide=wide)
 
     return _named_map(q, params)

@@ -58,16 +58,20 @@ class ResolvedPrecision:
     `global_cfg` governs in-graph activation/gradient quantization and any
     parameter no override matches; `overrides` are (name-fragment, config)
     pairs resolved per parameter by `for_param` (first match wins, matching
-    the FP-exemption rule's substring semantics in `opt_shell`).
+    the FP-exemption rule's substring semantics in `opt_shell`). With
+    `exact=True` fragments must equal the full parameter name instead —
+    machine-generated overrides (the numerics controller emits full names)
+    use this so one layer's decision can never substring-capture another.
     """
 
     global_cfg: Optional[HBFPConfig]
     overrides: Tuple[Tuple[str, Optional[HBFPConfig]], ...] = ()
+    exact: bool = False
 
     def for_param(self, name: str) -> Optional[HBFPConfig]:
         lname = name.lower()
         for frag, cfg in self.overrides:
-            if frag.lower() in lname:
+            if frag.lower() == lname if self.exact else frag.lower() in lname:
                 return cfg
         return self.global_cfg
 

@@ -8,6 +8,14 @@ block_c) slab; exponent-sharing tiles (tile_r × tile_c) subdivide the slab
 mantissas (int8 for m ≤ 8 else int16) and one int8 exponent per tile — the
 storage format that realizes the paper's 2× model compression and the 4×
 forward/backward bandwidth saving.
+
+Non-divisible shapes are padded with zeros to tile multiples inside the
+wrapper and the mantissas sliced back (zeros quantize to zero and never
+raise a tile amax, so real elements are unaffected; fully-padded tiles get
+the EXP_FLOOR exponent). `with_stats=True` adds fused fidelity outputs in
+the same pass — per-tile saturation counts and per-block exponent min/max —
+feeding the numerics observatory (DESIGN.md §9) without a second read of
+the tensor.
 """
 from __future__ import annotations
 
@@ -20,8 +28,13 @@ from jax.experimental import pallas as pl
 from repro.kernels.common import quantize_block
 
 
-def _quantize_kernel(x_ref, seed_ref, mant_ref, exp_ref, *, mantissa_bits,
-                     tile_r, tile_c, stochastic, block_r, block_c, n_cols):
+def _quantize_kernel(x_ref, seed_ref, *out_refs, mantissa_bits,
+                     tile_r, tile_c, stochastic, block_r, block_c, n_cols,
+                     with_stats):
+    if with_stats:
+        mant_ref, exp_ref, clip_ref, emin_ref, emax_ref = out_refs
+    else:
+        mant_ref, exp_ref = out_refs
     x = x_ref[...].astype(jnp.float32)
     g = x.reshape(block_r // tile_r, tile_r, block_c // tile_c, tile_c)
     amax = jnp.abs(g).max(axis=(1, 3), keepdims=True)
@@ -36,59 +49,91 @@ def _quantize_kernel(x_ref, seed_ref, mant_ref, exp_ref, *, mantissa_bits,
         idx = gidx.reshape(g.shape)
         seed = seed_ref[0, 0]
 
-    q, delta = quantize_block(g, mantissa_bits, amax,
-                              stochastic=stochastic, seed=seed, idx=idx)
+    q, delta, clipped = quantize_block(g, mantissa_bits, amax,
+                                       stochastic=stochastic, seed=seed,
+                                       idx=idx, with_clip=True)
     mdt = jnp.int8 if mantissa_bits <= 8 else jnp.int16
     mant_ref[...] = q.reshape(block_r, block_c).astype(mdt)
     dbits = jax.lax.bitcast_convert_type(delta, jnp.int32)
     e = ((dbits >> 23) & 0xFF) - 127 + (mantissa_bits - 2)
-    exp_ref[...] = e[:, 0, :, 0].astype(jnp.int8)
+    et = e[:, 0, :, 0]
+    exp_ref[...] = et.astype(jnp.int8)
+    if with_stats:
+        clip_ref[...] = clipped.sum(axis=(1, 3)).astype(jnp.int32)
+        emin_ref[...] = et.min(keepdims=True).astype(jnp.int32)
+        emax_ref[...] = et.max(keepdims=True).astype(jnp.int32)
+
+
+def _fit_block(n_tiles: int, want_tiles: int) -> int:
+    """Largest tile count ≤ want_tiles that divides n_tiles (≥ 1)."""
+    k = max(1, min(want_tiles, n_tiles))
+    while n_tiles % k:
+        k -= 1
+    return k
 
 
 @functools.partial(jax.jit, static_argnames=("mantissa_bits", "tile_r",
                                              "tile_c", "stochastic",
                                              "block_r", "block_c",
-                                             "interpret"))
+                                             "with_stats", "interpret"))
 def bfp_quantize_pallas(x, seed, *, mantissa_bits: int = 8,
                         tile_r: int = 128, tile_c: int = 128,
                         stochastic: bool = False,
                         block_r: int = 256, block_c: int = 512,
+                        with_stats: bool = False,
                         interpret: bool = False):
     """Pack a 2-D f32 array into BFP (mantissa, per-tile exponent).
 
-    x: [R, C] with R % tile_r == 0 and C % tile_c == 0 (ops.py pads).
+    x: [R, C], any shape — non-tile-divisible inputs are zero-padded to
+    tile multiples and the mantissas sliced back to [R, C] (the exponent
+    grid stays at the padded ceil(R/tile_r) × ceil(C/tile_c) resolution).
     seed: int32 scalar array (stochastic rounding stream id).
-    Returns (mantissa [R, C] int8/int16, exponent [R/tile_r, C/tile_c] int8).
+    Returns (mantissa [R, C] int8/int16, exponent grid int8); with
+    with_stats=True additionally (clip_count per tile int32, exp_min,
+    exp_max per block int32) fused into the same pass.
     """
     R, C = x.shape
-    block_r = min(block_r, R)
-    block_c = min(block_c, C)
-    # blocks must contain whole tiles
-    block_r = max((block_r // tile_r) * tile_r, min(tile_r, R))
-    block_c = max((block_c // tile_c) * tile_c, min(tile_c, C))
-    if R % block_r or C % block_c:
-        raise ValueError(f"shape {x.shape} not divisible by block "
-                         f"({block_r},{block_c})")
     tr, tc = min(tile_r, R), min(tile_c, C)
+    Rp, Cp = -(-R // tr) * tr, -(-C // tc) * tc
+    if (Rp, Cp) != (R, C):
+        x = jnp.pad(x, ((0, Rp - R), (0, Cp - C)))
+    block_r = tr * _fit_block(Rp // tr, max(min(block_r, Rp) // tr, 1))
+    block_c = tc * _fit_block(Cp // tc, max(min(block_c, Cp) // tc, 1))
     mdt = jnp.int8 if mantissa_bits <= 8 else jnp.int16
-    grid = (R // block_r, C // block_c)
+    grid = (Rp // block_r, Cp // block_c)
     kernel = functools.partial(
         _quantize_kernel, mantissa_bits=mantissa_bits, tile_r=tr, tile_c=tc,
-        stochastic=stochastic, block_r=block_r, block_c=block_c, n_cols=C)
-    return pl.pallas_call(
+        stochastic=stochastic, block_r=block_r, block_c=block_c, n_cols=Cp,
+        with_stats=with_stats)
+    out_specs = [
+        pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        pl.BlockSpec((block_r // tr, block_c // tc), lambda i, j: (i, j)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Rp, Cp), mdt),
+        jax.ShapeDtypeStruct((Rp // tr, Cp // tc), jnp.int8),
+    ]
+    if with_stats:
+        out_specs += [
+            pl.BlockSpec((block_r // tr, block_c // tc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ]
+        out_shape += [
+            jax.ShapeDtypeStruct((Rp // tr, Cp // tc), jnp.int32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+            jax.ShapeDtypeStruct(grid, jnp.int32),
+        ]
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
             pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # seed scalar
         ],
-        out_specs=[
-            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
-            pl.BlockSpec((block_r // tr, block_c // tc), lambda i, j: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((R, C), mdt),
-            jax.ShapeDtypeStruct((R // tr, C // tc), jnp.int8),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(x, seed)
+    mant = out[0][:R, :C]
+    return (mant, *out[1:])

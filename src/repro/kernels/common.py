@@ -48,9 +48,12 @@ def pow2(e):
 
 
 def quantize_block(x, mantissa_bits: int, amax, *, stochastic: bool,
-                   seed=None, idx=None):
+                   seed=None, idx=None, with_clip: bool = False):
     """Quantize x against per-element broadcastable amax. Returns (q, delta)
-    with q integral-valued f32 (castable to int8/int16) and delta the step."""
+    with q integral-valued f32 (castable to int8/int16) and delta the step.
+    with_clip=True additionally returns the bool saturation mask (elements
+    whose rounded mantissa exceeded ±(2^(m-1)-1)) — the fused stat output of
+    the conversion kernel (DESIGN.md §9)."""
     e = max_exponent(amax)
     delta = pow2(e - mantissa_bits + 2)
     v = x.astype(jnp.float32) / delta
@@ -59,4 +62,7 @@ def quantize_block(x, mantissa_bits: int, amax, *, stochastic: bool,
     else:
         v = jnp.rint(v)
     lim = float(2 ** (mantissa_bits - 1) - 1)
-    return jnp.clip(v, -lim, lim), delta
+    q = jnp.clip(v, -lim, lim)
+    if with_clip:
+        return q, delta, jnp.abs(v) > lim
+    return q, delta

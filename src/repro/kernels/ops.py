@@ -24,19 +24,30 @@ def _pad_to(x, mults):
     return x, False
 
 
-def bfp_quantize(x, seed=0, *, mantissa_bits=8, tile=128, stochastic=False):
+def bfp_quantize(x, seed=0, *, mantissa_bits=8, tile=128, stochastic=False,
+                 with_stats=False):
     """Quantize a 2-D array to packed BFP via the Pallas conversion kernel.
 
-    Returns (mantissa, per-tile exponent, padded_shape). Rows/cols are padded
-    to the tile size; callers slice with the original shape.
+    Returns (mantissa [R, C], per-tile exponent grid); the kernel zero-pads
+    non-tile-divisible shapes internally and slices the mantissas back.
+    with_stats=True appends an aggregate stats dict (fused outputs of the
+    same kernel pass, DESIGN.md §9): element clip count, clip fraction, and
+    the exponent min/max/spread across tiles.
     """
     assert x.ndim == 2
-    xp, _ = _pad_to(x, (tile, tile))
     seed = jnp.full((1, 1), seed, jnp.int32)
-    m, e = bfp_quantize_pallas(xp, seed, mantissa_bits=mantissa_bits,
-                               tile_r=tile, tile_c=tile,
-                               stochastic=stochastic, interpret=INTERPRET)
-    return m, e, xp.shape
+    out = bfp_quantize_pallas(x, seed, mantissa_bits=mantissa_bits,
+                              tile_r=tile, tile_c=tile,
+                              stochastic=stochastic, with_stats=with_stats,
+                              interpret=INTERPRET)
+    if not with_stats:
+        return out
+    m, e, clip_count, emin, emax = out
+    stats = {"clip_count": clip_count.sum(),
+             "clip_frac": clip_count.sum() / float(x.size),
+             "exp_min": emin.min(), "exp_max": emax.max(),
+             "exp_spread": emax.max() - emin.min()}
+    return m, e, stats
 
 
 def hbfp_matmul(x, w, seed=None, *, mantissa_bits=8, stochastic=False,

@@ -14,24 +14,43 @@ from repro.kernels.common import quantize_block
 
 
 def bfp_quantize_ref(x, seed, *, mantissa_bits=8, tile_r=128, tile_c=128,
-                     stochastic=False):
-    """Oracle for bfp_quantize_pallas. Returns (mantissa, exponent)."""
+                     stochastic=False, block_r=256, block_c=512,
+                     with_stats=False):
+    """Oracle for bfp_quantize_pallas: same zero-padding of non-divisible
+    shapes, same block fitting, same fused stat outputs. Returns
+    (mantissa, exponent) or (mantissa, exponent, clip_count per tile,
+    exp_min per block, exp_max per block)."""
+    from repro.kernels.bfp_quantize import _fit_block
     R, C = x.shape
     tr, tc = min(tile_r, R), min(tile_c, C)
-    g = x.astype(jnp.float32).reshape(R // tr, tr, C // tc, tc)
+    Rp, Cp = -(-R // tr) * tr, -(-C // tc) * tc
+    if (Rp, Cp) != (R, C):
+        x = jnp.pad(x, ((0, Rp - R), (0, Cp - C)))
+    g = x.astype(jnp.float32).reshape(Rp // tr, tr, Cp // tc, tc)
     amax = jnp.abs(g).max(axis=(1, 3), keepdims=True)
     idx = None
     if stochastic:
-        rows = jax.lax.broadcasted_iota(jnp.int32, (R, C), 0)
-        cols = jax.lax.broadcasted_iota(jnp.int32, (R, C), 1)
-        idx = (rows * C + cols).reshape(g.shape)
-    q, delta = quantize_block(g, mantissa_bits, amax, stochastic=stochastic,
-                              seed=jnp.asarray(seed).reshape(-1)[0], idx=idx)
+        rows = jax.lax.broadcasted_iota(jnp.int32, (Rp, Cp), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (Rp, Cp), 1)
+        idx = (rows * Cp + cols).reshape(g.shape)
+    q, delta, clipped = quantize_block(
+        g, mantissa_bits, amax, stochastic=stochastic,
+        seed=jnp.asarray(seed).reshape(-1)[0], idx=idx, with_clip=True)
     mdt = jnp.int8 if mantissa_bits <= 8 else jnp.int16
     dbits = jax.lax.bitcast_convert_type(delta, jnp.int32)
     e = ((dbits >> 23) & 0xFF) - 127 + (mantissa_bits - 2)
-    return (q.reshape(R, C).astype(mdt),
-            e[:, 0, :, 0].astype(jnp.int8))
+    et = e[:, 0, :, 0]
+    mant = q.reshape(Rp, Cp).astype(mdt)[:R, :C]
+    if not with_stats:
+        return mant, et.astype(jnp.int8)
+    # per-block exponent min/max with the kernel's fitted block grid
+    btr = _fit_block(Rp // tr, max(min(block_r, Rp) // tr, 1))
+    btc = _fit_block(Cp // tc, max(min(block_c, Cp) // tc, 1))
+    eb = et.reshape(Rp // tr // btr, btr, Cp // tc // btc, btc)
+    return (mant, et.astype(jnp.int8),
+            clipped.sum(axis=(1, 3)).astype(jnp.int32),
+            eb.min(axis=(1, 3)).astype(jnp.int32),
+            eb.max(axis=(1, 3)).astype(jnp.int32))
 
 
 def hbfp_matmul_ref(x, w, seed=None, *, mantissa_bits=8, stochastic=False,

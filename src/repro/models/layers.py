@@ -100,10 +100,11 @@ def gelu_ffn(x, p, ctx):
 # ----------------------------------------------------------------------------
 
 class Ctx:
-    __slots__ = ("cfg", "key", "compute_dtype", "act_constraint", "shard_fn")
+    __slots__ = ("cfg", "key", "compute_dtype", "act_constraint", "shard_fn",
+                 "act_tap")
 
     def __init__(self, cfg, key=None, compute_dtype=jnp.float32,
-                 act_constraint=None, shard_fn=None):
+                 act_constraint=None, shard_fn=None, act_tap=False):
         self.cfg = cfg
         self.key = key
         self.compute_dtype = compute_dtype
@@ -115,6 +116,10 @@ class Ctx:
         # calls ctx.shard(...) at layout-critical intermediates (MoE
         # dispatch) without knowing the mesh
         self.shard_fn = shard_fn
+        # numerics observatory (DESIGN.md §9): when True, loss_fn emits
+        # activation fidelity stats for the residual stream as a metrics
+        # aux output ("act_stats"); pure measurement, never changes values
+        self.act_tap = act_tap
 
     def shard(self, x, logical_axes):
         if self.shard_fn is None:
@@ -132,7 +137,7 @@ class Ctx:
         """Child context for layer i (i may be a traced int32)."""
         k = None if self.key is None else jax.random.fold_in(self.key, i)
         return Ctx(self.cfg, k, self.compute_dtype, self.act_constraint,
-                   self.shard_fn)
+                   self.shard_fn, self.act_tap)
 
 
 def init_linear(key, d_in, d_out, scale=None, dtype=jnp.float32):

@@ -298,7 +298,26 @@ def loss_fn(params, batch, arch: ArchConfig, ctx: Ctx,
     (scan, remat'd) so the f32 [tokens, vocab] logits never materialize in
     full — per-device temp drops from O(B·S·V) to O(chunk·V)."""
     x, positions = _embed_in(params, batch, arch, ctx)
+    act_stats = None
+    if ctx.act_tap and ctx.cfg is not None:
+        # numerics observatory (DESIGN.md §9): fidelity of quantizing the
+        # residual stream at stack entry/exit. Measurement only (the
+        # forward pass itself is untouched; aux outputs are not
+        # differentiated). Per-layer activation taps would need aux
+        # threading through the layer scan — same non-goal as per-layer
+        # activation schedules (§8).
+        from repro.numerics.stats import quantize_with_stats
+        from repro.core.bfp import act_tile_shape
+
+        def tap(t):
+            return quantize_with_stats(
+                t, ctx.cfg.mantissa_bits,
+                act_tile_shape(t.ndim, ctx.cfg.act_block))[1]
+
+        act_stats = {"embed_out": tap(x)}
     x, _, aux = _run_stack(params, x, positions, arch, ctx)
+    if act_stats is not None:
+        act_stats["final_hidden"] = tap(x)
     x = rms_norm(x, params["final_norm_scale"], arch.norm_eps,
                  arch.zero_centered_norm)
     labels = batch["labels"]
@@ -325,7 +344,10 @@ def loss_fn(params, batch, arch: ArchConfig, ctx: Ctx,
     denom = T * (labels.shape[2] if labels.ndim == 3 else 1)
     nll = tot / denom
     loss = nll + aux_weight * aux
-    return loss, {"nll": nll, "aux": aux, "loss": loss}
+    metrics = {"nll": nll, "aux": aux, "loss": loss}
+    if act_stats is not None:
+        metrics["act_stats"] = act_stats
+    return loss, metrics
 
 
 def make_cache(params, arch: ArchConfig, batch_size: int, ctx_len: int):

@@ -1,0 +1,25 @@
+"""Numerics observatory + closed-loop adaptive precision (DESIGN.md §9).
+
+The paper's argument rests on BFP's dynamic range being "good enough" for
+training; this package makes that observable at runtime and acts on it:
+
+  * `stats`      — fixed-size, jit-friendly per-tensor fidelity statistics
+                   (exponent histogram, clip/flush fractions, SQNR, tile
+                   exponent spread) computed as a side output of quantization;
+  * `collect`    — pytree-wide tap points for weights/gradients/activations
+                   with an every-N-steps cadence and a host-side ring buffer;
+  * `controller` — hysteresis-based per-layer precision controller mapping
+                   measured stats to PrecisionSchedule-compatible overrides,
+                   with a replayable decision log (checkpoint meta);
+  * `adaptive`   — the closed loop: an instrumented train step that collects
+                   stats on cadence, feeds the controller, and swaps in a new
+                   jit variant when a decision changes per-layer widths.
+"""
+from repro.numerics.stats import (TensorStats, quantize_with_stats,
+                                  stats_to_host, EXP_BINS, EXP_BIN_WIDTH,
+                                  EXP_BIN_LO)
+from repro.numerics.collect import (TapConfig, RingBuffer, weight_stats,
+                                    grad_stats, narrow_params_with_stats)
+from repro.numerics.controller import (ControllerConfig, PrecisionController,
+                                       DB_PER_BIT)
+from repro.numerics.adaptive import make_adaptive_train_step

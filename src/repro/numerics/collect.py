@@ -1,0 +1,138 @@
+"""Pytree-wide telemetry tap points + host-side ring buffer (DESIGN.md §9).
+
+Tap points (all fixed-size aux outputs of the compiled train step):
+
+  * **weights** — `narrow_params_with_stats` derives the narrow compute copy
+    exactly like `opt_shell.narrow_params` (bit-identical tree) and emits one
+    `TensorStats` per BFP weight, measuring the wide→narrow quantization the
+    paper's §4.2 shell performs every step;
+  * **gradients** — `grad_stats` measures the fidelity of quantizing each
+    weight gradient at the same per-parameter width (a FAST-style layer
+    sensitivity signal; the gradients themselves are NOT modified);
+  * **activations** — the model taps the residual stream entering the first
+    quantized matmul (`Ctx.act_tap` → `loss_fn` aux; per-layer activation
+    taps would need aux threading through the layer scan, the same
+    deliberate non-goal as per-layer activation schedules, DESIGN.md §8).
+
+Collection runs on an every-N-steps cadence: the instrumented step
+(`numerics.adaptive`) compiles one telemetry variant and one plain variant
+and dispatches on the host step counter, so off-cadence steps are the
+unmodified train step (`cadence=None` is bit-identical to no telemetry).
+Host-side, each collection lands in a bounded `RingBuffer`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.core import bfp
+from repro.core.opt_shell import (is_hbfp_weight, param_fold,
+                                  param_path_name, resolve_param_cfg)
+from repro.numerics.stats import TensorStats, quantize_with_stats
+
+
+@dataclasses.dataclass(frozen=True)
+class TapConfig:
+    """What to collect and how often.
+
+    cadence: collect every N steps (step % cadence == 0); None disables
+      telemetry entirely (the train step is the unmodified fast path).
+    weights/grads/acts: which tap points to enable on collection steps.
+    history: ring-buffer length (collections retained host-side).
+    """
+
+    cadence: Optional[int] = 100
+    weights: bool = True
+    grads: bool = True
+    acts: bool = True
+    history: int = 64
+
+    def __post_init__(self):
+        if self.cadence is not None and self.cadence < 1:
+            raise ValueError(f"cadence must be >= 1, got {self.cadence}")
+
+    def collect_at(self, step: int) -> bool:
+        return self.cadence is not None and step % self.cadence == 0
+
+
+def _walk_hbfp_weights(tree, cfg):
+    """Yield (name, leaf, concrete HBFPConfig) for every BFP-eligible weight
+    (same name semantics as opt_shell)."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        name = param_path_name(path)
+        c = resolve_param_cfg(cfg, name)
+        if c is None or not is_hbfp_weight(name, leaf):
+            continue
+        yield name, leaf, c
+
+
+def narrow_params_with_stats(params, cfg, key=None
+                             ) -> Tuple[Any, Dict[str, TensorStats]]:
+    """`opt_shell.narrow_params` + per-parameter fidelity stats.
+
+    Returns (narrow_tree, {param_name: TensorStats}). The narrow tree is
+    bit-identical to `narrow_params(params, cfg, key)` (the stats path reuses
+    the same quantization — regression-tested), so the telemetry variant of
+    the train step pays only the stats reductions, not a second quantize.
+    """
+    stats: Dict[str, TensorStats] = {}
+
+    def visit(path, leaf):
+        name = param_path_name(path)
+        c = resolve_param_cfg(cfg, name)
+        if c is None or not is_hbfp_weight(name, leaf):
+            return leaf
+        k = None
+        if key is not None and c.rounding == "stochastic":
+            k = param_fold(key, name)  # same stream as opt_shell
+        q, s = quantize_with_stats(
+            leaf, c.mantissa_bits, bfp.weight_tile_shape(leaf.ndim, c.tile),
+            c.rounding, k)
+        stats[name] = s
+        return q
+
+    narrow = jax.tree_util.tree_map_with_path(visit, params)
+    return narrow, stats
+
+
+def weight_stats(params, cfg) -> Dict[str, TensorStats]:
+    """Stats-only variant (deterministic nearest rounding): what narrowing
+    each BFP weight at its resolved width costs right now."""
+    return {name: quantize_with_stats(
+                leaf, c.mantissa_bits,
+                bfp.weight_tile_shape(leaf.ndim, c.tile))[1]
+            for name, leaf, c in _walk_hbfp_weights(params, cfg)}
+
+
+def grad_stats(grads, cfg) -> Dict[str, TensorStats]:
+    """Fidelity of quantizing each weight gradient at its parameter's
+    resolved width (nearest rounding; measurement only — the optimizer sees
+    the unmodified gradients). Low SQNR / high FTZ here means the layer's
+    gradient signal does not survive the current mantissa width."""
+    return {name: quantize_with_stats(
+                leaf, c.mantissa_bits,
+                bfp.weight_tile_shape(leaf.ndim, c.tile))[1]
+            for name, leaf, c in _walk_hbfp_weights(grads, cfg)}
+
+
+class RingBuffer:
+    """Bounded host-side history of telemetry collections."""
+
+    def __init__(self, maxlen: int = 64):
+        self._buf = collections.deque(maxlen=maxlen)
+
+    def append(self, step: int, snapshot: dict):
+        self._buf.append((int(step), snapshot))
+
+    def latest(self) -> Optional[Tuple[int, dict]]:
+        return self._buf[-1] if self._buf else None
+
+    def history(self):
+        return list(self._buf)
+
+    def __len__(self):
+        return len(self._buf)

@@ -1,0 +1,242 @@
+"""Closed-loop per-layer precision controller (DESIGN.md §9).
+
+Maps measured per-layer fidelity stats (`numerics.stats`) to mantissa-width
+decisions along a fixed ladder of widths (the paper's §6 design space:
+4/8/12/16 by default):
+
+  * **widen** one rung when the layer's worst-case SQNR falls below
+    `sqnr_floor_db`, its tile-saturation rate exceeds `clip_threshold`
+    (mantissa clipping — dynamic range not covered), or its flush-to-zero
+    rate exceeds `ftz_threshold` (an in-tile outlier crushing the mantissa
+    range: SQNR stays high because the outlier dominates signal power, so
+    FTZ is the only signal that sees it);
+  * **narrow** one rung when the layer holds ≥ `headroom_bits` bits of SQNR
+    headroom above the floor (each mantissa bit ≈ 6.02 dB) with clipping
+    and flush-to-zero well inside the deadband.
+
+Stability (the hysteresis contract, tested in tests/test_numerics.py):
+
+  * a **deadband** separates the widen and narrow conditions (floor vs
+    floor + 6.02·headroom_bits; clip_threshold vs clip_threshold/4;
+    ftz_threshold vs ftz_threshold/4);
+  * decisions need `patience` *consecutive* out-of-band observations and
+    respect a per-layer `cooldown` after every change;
+  * a **ratchet**: once a layer widens away from a width because of a
+    measured problem, it may never narrow back below the widened-to width.
+    Together these guarantee a stationary distribution produces at most one
+    direction change per layer before the width pins — no oscillation.
+
+Decisions are emitted as `PrecisionSchedule`-compatible per-layer overrides
+(`overrides()` / `resolved()`), so the train loop reuses PR 1's per-segment
+jit-variant machinery: each decision starts a new "segment" and the host
+dispatcher (`numerics.adaptive`) swaps compiled variants. The full decision
+log and controller state serialize into checkpoint meta (`to_meta` /
+`load_meta`), making restarts replay-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.formats import HBFPConfig
+from repro.core.schedule_precision import ResolvedPrecision
+
+DB_PER_BIT = 6.02  # SQNR gain per mantissa bit (20·log10(2))
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Thresholds and dynamics of the adaptive-precision loop.
+
+    ladder: allowed mantissa widths, ascending (paper §6 design space).
+    sqnr_floor_db: widen when worst-source SQNR drops below this.
+    clip_threshold: widen when the tile-saturation rate exceeds this.
+    ftz_threshold: widen when the flush-to-zero rate (fraction of nonzero
+      inputs quantized to exactly 0) exceeds this — the outlier-crushed-
+      tile failure mode SQNR and clipping are both blind to.
+    headroom_bits: narrow when SQNR ≥ floor + DB_PER_BIT·headroom_bits
+      (and clipping < clip_threshold/4, FTZ < ftz_threshold/4). Keep > the
+      largest ladder rung gap so a narrow can never re-trigger a widen via
+      the SQNR path.
+    patience: consecutive out-of-band observations required to act.
+    cooldown: observations to hold a layer after any decision.
+    """
+
+    ladder: Tuple[int, ...] = (4, 8, 12, 16)
+    sqnr_floor_db: float = 20.0
+    clip_threshold: float = 0.05
+    ftz_threshold: float = 0.5
+    headroom_bits: float = 5.0
+    patience: int = 2
+    cooldown: int = 2
+
+    def __post_init__(self):
+        if tuple(sorted(self.ladder)) != tuple(self.ladder) or \
+                len(set(self.ladder)) != len(self.ladder):
+            raise ValueError(f"ladder must be strictly ascending: "
+                             f"{self.ladder}")
+        if self.patience < 1 or self.cooldown < 0:
+            raise ValueError("patience >= 1 and cooldown >= 0 required")
+
+
+def merge_sources(snapshot: dict) -> Dict[str, dict]:
+    """Merge a telemetry snapshot {source: {layer: stats}} (sources:
+    "weights"/"grads"/"acts") into per-layer worst-case signals: min SQNR,
+    max clip/saturation/FTZ. Activation taps are global (not per-parameter)
+    and are skipped here — the controller drives *weight* precision."""
+    merged: Dict[str, dict] = {}
+    for source in ("weights", "grads"):
+        for layer, s in snapshot.get(source, {}).items():
+            m = merged.setdefault(layer, {"sqnr_db": float("inf"),
+                                          "clip_frac": 0.0,
+                                          "sat_tile_frac": 0.0,
+                                          "ftz_frac": 0.0})
+            m["sqnr_db"] = min(m["sqnr_db"], s["sqnr_db"])
+            for k in ("clip_frac", "sat_tile_frac", "ftz_frac"):
+                m[k] = max(m[k], s[k])
+    return merged
+
+
+class PrecisionController:
+    """Hysteresis controller over per-layer mantissa widths.
+
+    Feed it merged per-layer stats via `observe(step, merged)`; read the
+    current per-layer state via `overrides()` (PrecisionSchedule-compatible
+    (name, width) pairs) or `resolved(base_cfg)` (a ResolvedPrecision ready
+    for `make_train_step`). `self.log` is the append-only decision log.
+    """
+
+    def __init__(self, config: Optional[ControllerConfig] = None,
+                 base_bits: int = 8):
+        self.config = config or ControllerConfig()
+        if base_bits not in self.config.ladder:
+            raise ValueError(f"base_bits {base_bits} not on ladder "
+                             f"{self.config.ladder}")
+        self.base_bits = int(base_bits)
+        self.widths: Dict[str, int] = {}     # only layers that diverged
+        self._floor: Dict[str, int] = {}     # ratchet: min allowed width
+        self._votes: Dict[str, int] = {}     # +widen / -narrow streak
+        self._cooldown: Dict[str, int] = {}
+        self.log: List[dict] = []
+
+    # -- state ------------------------------------------------------------
+    def width(self, layer: str) -> int:
+        return self.widths.get(layer, self.base_bits)
+
+    def overrides(self) -> Tuple[Tuple[str, int], ...]:
+        """Per-layer overrides, schedule-compatible, deterministic order."""
+        return tuple(sorted(self.widths.items()))
+
+    def resolved(self, base_cfg: HBFPConfig) -> ResolvedPrecision:
+        """ResolvedPrecision for the *current* controller state (one
+        adaptive 'segment'): base_cfg everywhere, per-layer width overrides
+        merged onto the base grid exactly like schedule overrides."""
+        ovr = tuple(
+            (name, base_cfg.with_(
+                mantissa_bits=w,
+                wide_mantissa_bits=max(base_cfg.wide_mantissa_bits, w)))
+            for name, w in self.overrides())
+        return ResolvedPrecision(global_cfg=base_cfg, overrides=ovr,
+                                 exact=True)
+
+    # -- the control law ---------------------------------------------------
+    def _rung(self, bits: int, direction: int) -> Optional[int]:
+        ladder = self.config.ladder
+        i = ladder.index(bits) + direction
+        if 0 <= i < len(ladder):
+            return ladder[i]
+        return None
+
+    def observe(self, step: int, merged: Dict[str, dict]) -> List[dict]:
+        """Consume one telemetry collection; returns the decisions made
+        (also appended to `self.log`). Pure host logic — deterministic in
+        (state, inputs), which is what makes restarts replayable."""
+        cfg = self.config
+        decisions: List[dict] = []
+        for layer in sorted(merged):
+            s = merged[layer]
+            w = self.width(layer)
+            if self._cooldown.get(layer, 0) > 0:
+                self._cooldown[layer] -= 1
+                continue
+            clip = s.get("sat_tile_frac", s.get("clip_frac", 0.0))
+            ftz = s.get("ftz_frac", 0.0)
+            widen_wanted = (s["sqnr_db"] < cfg.sqnr_floor_db
+                            or clip > cfg.clip_threshold
+                            or ftz > cfg.ftz_threshold) \
+                and self._rung(w, +1) is not None
+            narrow_wanted = (not widen_wanted
+                             and s["sqnr_db"] >= cfg.sqnr_floor_db
+                             + DB_PER_BIT * cfg.headroom_bits
+                             and clip < cfg.clip_threshold / 4.0
+                             and ftz < cfg.ftz_threshold / 4.0)
+            target = self._rung(w, -1) if narrow_wanted else None
+            narrow_wanted = target is not None \
+                and target >= self._floor.get(layer, cfg.ladder[0])
+
+            v = self._votes.get(layer, 0)
+            if widen_wanted:
+                v = v + 1 if v > 0 else 1
+            elif narrow_wanted:
+                v = v - 1 if v < 0 else -1
+            else:
+                v = 0
+            self._votes[layer] = v
+
+            if v >= cfg.patience:
+                to = self._rung(w, +1)
+                reason = ("clip>thr" if clip > cfg.clip_threshold
+                          else "sqnr<floor"
+                          if s["sqnr_db"] < cfg.sqnr_floor_db
+                          else "ftz>thr")
+                self._apply(decisions, step, layer, "widen", w, to, reason, s)
+                self._floor[layer] = to  # ratchet: never narrow back past
+            elif v <= -cfg.patience:
+                self._apply(decisions, step, layer, "narrow", w, target,
+                            "headroom", s)
+        return decisions
+
+    def _apply(self, decisions, step, layer, action, frm, to, reason, s):
+        if to == self.base_bits:
+            self.widths.pop(layer, None)
+        else:
+            self.widths[layer] = int(to)
+        self._votes[layer] = 0
+        self._cooldown[layer] = self.config.cooldown
+        d = {"step": int(step), "layer": layer, "action": action,
+             "from": int(frm), "to": int(to), "reason": reason,
+             "sqnr_db": round(float(s["sqnr_db"]), 3),
+             "clip_frac": float(s.get("sat_tile_frac",
+                                      s.get("clip_frac", 0.0)))}
+        self.log.append(d)
+        decisions.append(d)
+
+    # -- persistence (checkpoint meta) ------------------------------------
+    def to_meta(self) -> dict:
+        return {"base_bits": self.base_bits,
+                "config": dataclasses.asdict(self.config),
+                "widths": dict(self.widths),
+                "floor": dict(self._floor),
+                "votes": dict(self._votes),
+                "cooldown": dict(self._cooldown),
+                "log": list(self.log)}
+
+    def load_meta(self, meta: dict) -> "PrecisionController":
+        """Restore controller state saved by `to_meta` (checkpoint resume).
+        The restored state + the deterministic control law make the decision
+        stream bit-identical to the uninterrupted run (tested)."""
+        self.base_bits = int(meta["base_bits"])
+        c = dict(meta["config"])
+        c["ladder"] = tuple(c["ladder"])
+        self.config = ControllerConfig(**c)
+        self.widths = {k: int(v) for k, v in meta["widths"].items()}
+        self._floor = {k: int(v) for k, v in meta["floor"].items()}
+        self._votes = {k: int(v) for k, v in meta["votes"].items()}
+        self._cooldown = {k: int(v) for k, v in meta["cooldown"].items()}
+        self.log = list(meta["log"])
+        return self
+
+    @classmethod
+    def from_meta(cls, meta: dict) -> "PrecisionController":
+        c = cls(base_bits=int(meta["base_bits"]))
+        return c.load_meta(meta)

@@ -1,0 +1,158 @@
+"""Per-tensor BFP fidelity statistics (DESIGN.md §9).
+
+Everything here is fixed-size and jit-friendly: a `TensorStats` is a small
+pytree of scalars plus one fixed-width exponent histogram, so a pytree-wide
+collection (one `TensorStats` per parameter) is a static-shape aux output of
+the train step — no host round-trips inside the compiled graph.
+
+`quantize_with_stats` mirrors `core.bfp.quantize` op-for-op (same tile view,
+same exponent extraction, same rounding-uniform shapes) and returns the
+dequantized tensor *bit-identical* to `bfp.quantize` — in both rounding
+modes — plus the stats of that exact quantization:
+
+  * `exp_hist`    — histogram of per-tile shared exponents over EXP_BINS
+                    fixed bins (range clamps; see EXP_BIN_LO/EXP_BIN_WIDTH);
+  * `clip_frac`   — fraction of elements whose rounded mantissa exceeded the
+                    signed limit ±(2^(m-1)-1) and was saturated;
+  * `sat_tile_frac` — fraction of exponent-sharing tiles containing at least
+                    one saturated element (amax-derived exponents make the
+                    element-level fraction tiny by construction — at most the
+                    few near-amax elements per tile — so the per-tile rate is
+                    the sensitive clipping signal the controller thresholds);
+  * `ftz_frac`    — flush-to-zero: fraction of *nonzero* inputs that
+                    quantized to exactly 0 (mantissa underflow);
+  * `sqnr_db`     — signal-to-quantization-noise ratio, 10·log10(Σx² / Σe²),
+                    capped at SQNR_CAP_DB when the error is (near) zero;
+  * `exp_spread`  — max − min shared exponent across tiles ("block-amax
+                    spread": how much dynamic range the tiling absorbs);
+  * `n`           — element count (f32, for host-side weighting).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfp
+
+# Exponent histogram: EXP_BINS bins of EXP_BIN_WIDTH exponents starting at
+# EXP_BIN_LO; exponents outside clamp into the end bins. Covers 2^-64..2^63,
+# far beyond trainable tensor magnitudes.
+EXP_BINS = 32
+EXP_BIN_WIDTH = 4
+EXP_BIN_LO = -64
+
+SQNR_CAP_DB = 200.0
+
+
+class TensorStats(NamedTuple):
+    exp_hist: jax.Array       # [EXP_BINS] f32 — per-tile exponent histogram
+    clip_frac: jax.Array      # () f32 — element-level saturation fraction
+    sat_tile_frac: jax.Array  # () f32 — tiles with ≥1 saturated element
+    ftz_frac: jax.Array       # () f32
+    sqnr_db: jax.Array        # () f32
+    exp_spread: jax.Array     # () f32 — max-min tile exponent
+    n: jax.Array              # () f32 — element count
+
+
+def identity_stats(n: float = 0.0) -> TensorStats:
+    """Stats of a lossless (identity) quantization."""
+    return TensorStats(exp_hist=jnp.zeros((EXP_BINS,), jnp.float32),
+                       clip_frac=jnp.zeros((), jnp.float32),
+                       sat_tile_frac=jnp.zeros((), jnp.float32),
+                       ftz_frac=jnp.zeros((), jnp.float32),
+                       sqnr_db=jnp.full((), SQNR_CAP_DB, jnp.float32),
+                       exp_spread=jnp.zeros((), jnp.float32),
+                       n=jnp.asarray(float(n), jnp.float32))
+
+
+def _exp_hist(e: jax.Array) -> jax.Array:
+    idx = jnp.clip((e.reshape(-1) - EXP_BIN_LO) // EXP_BIN_WIDTH,
+                   0, EXP_BINS - 1)
+    return jnp.zeros((EXP_BINS,), jnp.float32).at[idx].add(1.0)
+
+
+def quantize_with_stats(x: jax.Array, mantissa_bits: int,
+                        tile_shape: Sequence[Optional[int]],
+                        rounding: str = "nearest",
+                        key: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, TensorStats]:
+    """FP→BFP→FP simulation + fidelity stats of that same quantization.
+
+    The returned tensor is bit-identical to `bfp.quantize(x, ...)` in both
+    rounding modes (the rounding noise is drawn at the same shape from the
+    same key — regression-tested), so a telemetry step can reuse it as the
+    compute copy at zero extra quantize cost; the stats are side outputs.
+    """
+    if mantissa_bits >= 24:  # identity quantization: perfect fidelity
+        return x, identity_stats(jnp.size(x))
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+
+    # per-tile exponents (the internals of bfp.tile_scales, kept so the
+    # histogram sees one entry per tile rather than the broadcast delta)
+    padded, grouped, axes, needs_pad = bfp._tile_view(xf.shape, tile_shape)
+    ax = jnp.abs(xf)
+    if needs_pad:
+        ax = jnp.pad(ax, [(0, p - d) for p, d in zip(padded, xf.shape)])
+    amax = ax.reshape(grouped).max(axis=tuple(axes), keepdims=True)
+    e = bfp._max_exponent(amax)
+    delta = bfp.pow2(e - mantissa_bits + 2)
+    delta_full = jnp.broadcast_to(delta, grouped).reshape(padded)
+    if needs_pad:
+        delta_full = delta_full[tuple(slice(0, d) for d in xf.shape)]
+
+    # identical op sequence to bfp.quantize from here on
+    lim = float(2 ** (mantissa_bits - 1) - 1)
+    v = bfp._round(xf / delta_full, rounding, key)
+    q = jnp.clip(v, -lim, lim)
+    xq = (q * delta_full).astype(dt)
+
+    n = jnp.asarray(float(jnp.size(x)), jnp.float32)
+    clipped = jnp.abs(v) > lim
+    clip = jnp.sum(clipped) / n
+    cp = clipped
+    if needs_pad:  # padding is zeros → never clipped
+        cp = jnp.pad(clipped, [(0, p - d) for p, d in zip(padded, xf.shape)])
+    tile_sat = cp.reshape(grouped).any(axis=tuple(axes))
+    sat_tiles = jnp.sum(tile_sat) / float(tile_sat.size)
+    nonzero = xf != 0.0
+    ftz = (jnp.sum(nonzero & (q == 0.0))
+           / jnp.maximum(jnp.sum(nonzero), 1.0))
+    err = xf - q * delta_full
+    sig_pow = jnp.sum(xf * xf)
+    err_pow = jnp.sum(err * err)
+    sqnr = jnp.where(
+        err_pow > 0.0,
+        10.0 * jnp.log10(jnp.maximum(sig_pow, 1e-30) /
+                         jnp.maximum(err_pow, 1e-30)),
+        SQNR_CAP_DB)
+    ef = e.astype(jnp.float32)
+    stats = TensorStats(exp_hist=_exp_hist(e),
+                        clip_frac=clip.astype(jnp.float32),
+                        sat_tile_frac=sat_tiles.astype(jnp.float32),
+                        ftz_frac=ftz.astype(jnp.float32),
+                        sqnr_db=jnp.clip(sqnr, -SQNR_CAP_DB,
+                                         SQNR_CAP_DB).astype(jnp.float32),
+                        exp_spread=(ef.max() - ef.min()).astype(jnp.float32),
+                        n=n)
+    return xq, stats
+
+
+def stats_to_host(stats) -> dict:
+    """Device pytree of TensorStats → plain-python nested dict of floats
+    (controller / ring-buffer / JSON form)."""
+    host = jax.device_get(stats)
+
+    def one(s):
+        return {"clip_frac": float(s.clip_frac),
+                "sat_tile_frac": float(s.sat_tile_frac),
+                "ftz_frac": float(s.ftz_frac),
+                "sqnr_db": float(s.sqnr_db),
+                "exp_spread": float(s.exp_spread),
+                "n": float(s.n),
+                "exp_hist": [float(v) for v in s.exp_hist]}
+
+    return jax.tree.map(one, host,
+                        is_leaf=lambda t: isinstance(t, TensorStats))

@@ -4,7 +4,10 @@ A fixed pool of `max_batch` cache lanes; requests are admitted into free
 lanes (prefill writes the prompt KV into the lane), every `step()` advances
 ALL active lanes by one token in a single batched decode, and finished lanes
 (EOS / max_new_tokens) are freed immediately for the next request — the
-vLLM-style schedule, sized for one jit'd decode graph.
+vLLM-style schedule, sized for one jit'd decode graph. When every lane is
+busy, `submit()` enqueues the request (FIFO) instead of failing; `step()`
+drains the queue into lanes as they free, so admission order is preserved
+under overload.
 
 Weights are the narrow-BFP serving copy (paper §4.2: 8-bit mantissa weights
 at inference); with arch.bfp_kv_cache the lanes store 8-bit BFP K/V
@@ -12,8 +15,9 @@ at inference); with arch.bfp_kv_cache the lanes store 8-bit BFP K/V
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +53,12 @@ class ServeEngine:
         self._ctx = Ctx(self.hbfp, None, jnp.dtype(arch.dtype))
         self.cache = make_cache(self.params, arch, max_batch, ctx_len)
         self.slots: List[Optional[_Req]] = [None] * max_batch
+        # overload queue: (rid, prompt, max_new_tokens), drained in step()
+        self.pending: Deque[Tuple[int, List[int], int]] = collections.deque()
+        # requests complete at admission (max_new_tokens=1 / instant EOS):
+        # they never occupy a lane; the next step() (or drain()) delivers
+        # and clears them, so a step()-polling consumer sees every request
+        self._finished: Dict[int, List[int]] = {}
         self._next_rid = 0
         self._last_tok = jnp.zeros((max_batch, 1), jnp.int32)
         self._decode = jax.jit(self._decode_impl)
@@ -70,22 +80,52 @@ class ServeEngine:
 
     # -- admission --------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 32) -> int:
-        """Admit a request; returns rid. Raises if no free lane."""
+        """Admit a request into a free lane, or enqueue it (FIFO) when all
+        lanes are busy — step() drains the queue as lanes free. Returns rid
+        immediately in both cases."""
+        if len(prompt) >= self.ctx_len:  # reject before queueing
+            raise ValueError(f"prompt length {len(prompt)} >= ctx_len "
+                             f"{self.ctx_len}")
+        rid = self._next_rid
+        self._next_rid += 1
         lane = next((i for i, s in enumerate(self.slots) if s is None), None)
-        if lane is None:
-            raise RuntimeError("no free lanes; call step() until one frees")
+        if lane is None or self.pending:  # keep FIFO order under overload
+            self.pending.append((rid, list(prompt), max_new_tokens))
+            return rid
+        self._admit(lane, rid, prompt, max_new_tokens)
+        return rid
+
+    def _admit(self, lane: int, rid: int, prompt: List[int],
+               max_new_tokens: int) -> int:
+        """Prefill `prompt` into `lane`; returns the first generated token.
+        A request already complete after prefill (max_new_tokens=1 or an
+        immediate EOS) is moved to `_finished` and leaves the lane free."""
         plen = len(prompt)
         assert plen < self.ctx_len
         toks = jnp.asarray(prompt, jnp.int32)[None]
         logits, pcache = self._prefill1(self.params, toks, plen=plen)
         # write the prompt KV into lane slots [0, plen)
         self.cache = self._insert_lane(self.cache, pcache, lane, plen)
-        first = self._pick(logits[:, -1])[0]
-        self._last_tok = self._last_tok.at[lane, 0].set(first)
-        self.slots[lane] = _Req(self._next_rid, plen, max_new_tokens - 1,
-                                [int(first)])
-        self._next_rid += 1
-        return self.slots[lane].rid
+        first = int(self._pick(logits[:, -1])[0])
+        req = _Req(rid, plen, max_new_tokens - 1, [first])
+        if req.remaining <= 0 or (self.eos_id is not None
+                                  and first == self.eos_id):
+            self._finished[rid] = req.tokens
+        else:
+            self._last_tok = self._last_tok.at[lane, 0].set(first)
+            self.slots[lane] = req
+        return first
+
+    def _drain_pending(self, out: Dict[int, int]):
+        """Admit queued requests into free lanes (FIFO); their prefill-
+        produced first tokens are reported in `out`."""
+        while self.pending:
+            lane = next((i for i, s in enumerate(self.slots) if s is None),
+                        None)
+            if lane is None:
+                return
+            rid, prompt, mnt = self.pending.popleft()
+            out[rid] = self._admit(lane, rid, prompt, mnt)
 
     def _insert_lane(self, cache, pcache, lane: int, plen: int):
         def one(path, big, small):
@@ -113,34 +153,49 @@ class ServeEngine:
 
     # -- one engine tick ---------------------------------------------------
     def step(self) -> Dict[int, int]:
-        """Advance every active lane one token; returns {rid: token};
-        frees finished lanes."""
-        if not any(self.slots):
-            return {}
-        pos = jnp.asarray([[s.pos if s else 0] for s in self.slots],
-                          jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          self._last_tok, pos)
-        nxt = self._pick(logits)
+        """Advance every active lane one token; returns {rid: token}; frees
+        finished lanes and admits queued requests into them (a queued
+        request's first entry in the dict is its prefill-produced token).
+        Requests that completed at admission are delivered here too — their
+        single token, exactly once — so polling step() observes every
+        request and `_finished` stays bounded."""
         out: Dict[int, int] = {}
-        for i, s in enumerate(self.slots):
-            if s is None:
-                continue
-            t = int(nxt[i])
-            s.tokens.append(t)
-            s.pos += 1
-            s.remaining -= 1
-            out[s.rid] = t
-            if s.remaining <= 0 or (self.eos_id is not None
-                                    and t == self.eos_id):
-                self.slots[i] = None     # lane freed for the next request
-        self._last_tok = nxt[:, None]
+        if any(self.slots):
+            pos = jnp.asarray([[s.pos if s else 0] for s in self.slots],
+                              jnp.int32)
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              self._last_tok, pos)
+            nxt = self._pick(logits)
+            for i, s in enumerate(self.slots):
+                if s is None:
+                    continue
+                t = int(nxt[i])
+                s.tokens.append(t)
+                s.pos += 1
+                s.remaining -= 1
+                out[s.rid] = t
+                if s.remaining <= 0 or (self.eos_id is not None
+                                        and t == self.eos_id):
+                    self.slots[i] = None  # lane freed for the next request
+            self._last_tok = nxt[:, None]
+        self._drain_pending(out)
+        for rid, toks in self._finished.items():
+            out.setdefault(rid, toks[-1])
+        self._finished.clear()
         return out
 
     def drain(self) -> Dict[int, List[int]]:
-        """Run until all active requests finish; returns {rid: tokens}."""
+        """Run until all active AND queued requests finish; returns
+        {rid: tokens} (including requests that completed at admission)."""
         results: Dict[int, List[int]] = {
             s.rid: s.tokens for s in self.slots if s}
-        while any(self.slots):
-            self.step()
+        results.update(self._finished)
+        self._finished.clear()
+        while any(self.slots) or self.pending:
+            out = self.step()
+            for s in self.slots:
+                if s is not None and s.rid not in results:
+                    results[s.rid] = s.tokens
+            for rid, t in out.items():  # completed at admission in step()
+                results.setdefault(rid, [t])
         return results

@@ -56,7 +56,8 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
                     act_constraint=None, shard_fn=None,
                     weight_decay: float = 0.1,
                     grad_clip: float = 1.0,
-                    accum_unroll: bool = False):
+                    accum_unroll: bool = False,
+                    taps=None):
     """Returns train_step(state, batch, key) -> (state, metrics).
 
     hbfp: the precision for this compiled step — None (fp32), a static
@@ -71,6 +72,12 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
     reduce-scatter (each rank only needs its update shard).
     act_constraint: optional fn(x)->x sequence-parallel residual-stream
     constraint (threaded through Ctx into the layer scan).
+    taps: optional `numerics.TapConfig` — THIS compiled step becomes the
+    telemetry variant: metrics gains a "numerics" entry, a fixed-size pytree
+    of per-parameter `TensorStats` for the weight narrowing and (optionally)
+    gradient/activation fidelity (DESIGN.md §9). The main-path computation
+    is bit-identical to taps=None (the weight tap reuses the same
+    quantization); cadence dispatch lives in `numerics.adaptive`.
     """
     compute_dtype = jnp.dtype(arch.dtype)
     # `hbfp` may be a plain HBFPConfig (static, paper setting) or a
@@ -94,6 +101,10 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
         act_cfg = param_cfg = None
         stochastic = False
 
+    if taps is not None and param_cfg is None:
+        taps = None  # true fp32 step: nothing to measure (per-layer-only
+        # configs — global_cfg None with weight overrides — keep their taps)
+
     def cast(p):
         def one(x):
             # quantizable matrices run in compute dtype; tiny FP params
@@ -101,15 +112,27 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
             return x.astype(compute_dtype) if x.ndim >= 2 else x
         return jax.tree.map(one, p)
 
+    # the activation tap measures against the global activation config, so
+    # it needs one (weight/grad taps only need per-param configs)
+    act_tap = taps is not None and taps.acts and grad_accum == 1 \
+        and act_cfg is not None
+
     def loss_at(narrow, batch, key):
-        ctx = Ctx(act_cfg, key, compute_dtype, act_constraint, shard_fn)
+        ctx = Ctx(act_cfg, key, compute_dtype, act_constraint, shard_fn,
+                  act_tap=act_tap)
         return loss_fn(narrow, batch, arch, ctx)
 
     def train_step(state: TrainState, batch, key):
+        numerics = {}
         nkey = None
         if stochastic:
             nkey = jax.random.fold_in(key, 0x5EED)
-        narrow = narrow_params(state.params, param_cfg, nkey)
+        if taps is not None and taps.weights:
+            from repro.numerics.collect import narrow_params_with_stats
+            narrow, numerics["weights"] = narrow_params_with_stats(
+                state.params, param_cfg, nkey)
+        else:
+            narrow = narrow_params(state.params, param_cfg, nkey)
         narrow = cast(narrow)
         if fwd_constraint is not None:
             narrow = fwd_constraint(narrow)
@@ -139,6 +162,13 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
         else:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_at, has_aux=True)(narrow, batch, key)
+            if act_tap:
+                metrics = dict(metrics)
+                numerics["acts"] = metrics.pop("act_stats")
+
+        if taps is not None and taps.grads:
+            from repro.numerics.collect import grad_stats
+            numerics["grads"] = grad_stats(grads, param_cfg)
 
         if grad_constraint is not None:
             grads = grad_constraint(grads)
@@ -149,6 +179,8 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
         metrics = dict(metrics)
         metrics["lr"] = schedule(opt.step) if callable(schedule) \
             else jnp.asarray(schedule)
+        if numerics:
+            metrics["numerics"] = numerics
         return TrainState(params, opt, state.step + 1), metrics
 
     return train_step

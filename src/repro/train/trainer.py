@@ -16,7 +16,12 @@ Behaviours (exercised by tests/test_trainer.py):
     PrecisionSchedule (pair with train_step.make_scheduled_train_step — the
     step fn dispatches on state.step, so resume lands in the right schedule
     segment automatically); the spec is stored in checkpoint meta and
-    packed checkpoints use the widths resolved at the checkpointed step.
+    packed checkpoints use the widths resolved at the checkpointed step;
+  * adaptive precision (DESIGN.md §9): pass `controller=` (a
+    `numerics.PrecisionController`, paired with
+    `numerics.make_adaptive_train_step`) — its full state incl. the decision
+    log is serialized into checkpoint meta ("numerics_controller") and
+    restored on resume, so a restarted run replays identical decisions.
 """
 from __future__ import annotations
 
@@ -35,7 +40,7 @@ class Trainer:
                  data_fn: Callable[[int], Any], ckpt_dir: Optional[str],
                  ckpt_every: int = 50, keep: int = 3,
                  hbfp=None,  # HBFPConfig | PrecisionSchedule | None
-
+                 controller=None,  # numerics.PrecisionController | None
                  seed: int = 0, background_ckpt: bool = False,
                  state_shardings=None):
         self.train_step = train_step
@@ -44,6 +49,7 @@ class Trainer:
         self.ckpt_every = ckpt_every
         self.keep = keep
         self.hbfp = hbfp
+        self.controller = controller
         self.seed = seed
         self.background_ckpt = background_ckpt
         self.state = init_state
@@ -53,6 +59,8 @@ class Trainer:
             self.state, meta = load_checkpoint(ckpt_dir, init_state,
                                                shardings=state_shardings)
             self.start_step = int(meta["step"])
+            if controller is not None and "numerics_controller" in meta:
+                controller.load_meta(meta["numerics_controller"])
 
     def _maybe_ckpt(self, step: int, force: bool = False):
         if self.ckpt_dir is None:
@@ -61,9 +69,13 @@ class Trainer:
             if self._pending is not None:
                 self._pending.join()
                 self._pending = None
+            extra = None
+            if self.controller is not None:
+                extra = {"numerics_controller": self.controller.to_meta()}
             r = save_checkpoint(self.ckpt_dir, step, self.state,
                                 hbfp=self.hbfp, keep=self.keep,
-                                background=self.background_ckpt)
+                                background=self.background_ckpt,
+                                extra_meta=extra)
             if self.background_ckpt:
                 self._pending = r
 
@@ -79,7 +91,11 @@ class Trainer:
             key = jax.random.fold_in(jax.random.key(self.seed), step)
             self.state, metrics = self.train_step(self.state, batch, key)
             if log_every and step % log_every == 0:
-                ljit = {k: float(v) for k, v in metrics.items()}
+                # scalars only (a taps-enabled step's "numerics" aux is a
+                # nested stats pytree — consumed upstream, skipped here)
+                ljit = {k: float(v) for k, v in metrics.items()
+                        if hasattr(v, "ndim") and v.ndim == 0
+                        or isinstance(v, (int, float))}
                 log_fn(f"step {step:6d} "
                        + " ".join(f"{k}={v:.4f}" for k, v in ljit.items())
                        + f" ({time.time() - t0:.1f}s)")

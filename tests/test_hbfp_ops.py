@@ -25,6 +25,7 @@ def test_matmul_none_cfg_is_fp32():
     assert jnp.array_equal(hbfp_matmul(x, w, None), x @ w)
 
 
+@pytest.mark.slow
 def test_backward_formulas():
     """dx = Q(g) @ Q(w)^T and dw = Q(x)^T @ Q(g) exactly (paper §5.1)."""
     cfg = HBFP8_16
@@ -69,6 +70,7 @@ def test_requantize_weights_skip_is_noop_on_prequantized():
     assert jnp.array_equal(y1, y2)
 
 
+@pytest.mark.slow
 def test_batched_and_broadcast():
     cfg = HBFP12_16
     a = jax.random.normal(jax.random.key(0), (2, 3, 8, 16))

@@ -9,7 +9,8 @@ from repro.kernels import ops, ref
 from repro.kernels.bfp_quantize import bfp_quantize_pallas
 from repro.kernels.hbfp_matmul import hbfp_matmul_pallas
 
-SHAPES_Q = [(64, 64), (128, 256), (192, 64), (256, 384)]
+SHAPES_Q = [(64, 64), (128, 256), (192, 64), (256, 384), (100, 200),
+            (130, 72)]
 TILES = [(32, 32), (64, 64), (64, 128)]
 
 
@@ -17,8 +18,7 @@ TILES = [(32, 32), (64, 64), (64, 128)]
 @pytest.mark.parametrize("tile", TILES)
 @pytest.mark.parametrize("m", [4, 8, 12])
 def test_quantize_kernel_vs_ref(shape, tile, m):
-    if shape[0] % tile[0] or shape[1] % tile[1]:
-        pytest.skip("non-divisible")
+    # non-divisible shapes pad-and-slice inside the wrapper (no skips)
     x = jax.random.normal(jax.random.key(hash((shape, tile, m)) % 2**31),
                           shape).astype(jnp.float32) * 3.3
     seed = jnp.zeros((1, 1), jnp.int32)
@@ -26,10 +26,61 @@ def test_quantize_kernel_vs_ref(shape, tile, m):
                                  tile_c=tile[1], interpret=True)
     mr, er = ref.bfp_quantize_ref(x, 0, mantissa_bits=m, tile_r=tile[0],
                                   tile_c=tile[1])
+    assert mk.shape == shape
     np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
     np.testing.assert_array_equal(np.asarray(ek), np.asarray(er))
 
 
+@pytest.mark.parametrize("shape", [(128, 256), (100, 200)])
+@pytest.mark.parametrize("m", [4, 8])
+def test_quantize_kernel_fused_stats(shape, m):
+    """Fused stat outputs (clip count per tile, exponent min/max per block)
+    match the oracle and the pure-jnp observatory stats (DESIGN.md §9)."""
+    x = jax.random.normal(jax.random.key(shape[0] + m), shape) * 2.1
+    seed = jnp.zeros((1, 1), jnp.int32)
+    outs = bfp_quantize_pallas(x, seed, mantissa_bits=m, tile_r=64,
+                               tile_c=64, with_stats=True, interpret=True)
+    refs = ref.bfp_quantize_ref(x, 0, mantissa_bits=m, tile_r=64, tile_c=64,
+                                with_stats=True)
+    for a, b in zip(outs, refs):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    mant, exp, clip_count, emin, emax = outs
+    # cross-check vs the jnp observatory path on the padded array
+    from repro.numerics.stats import quantize_with_stats
+    Rp = -(-shape[0] // 64) * 64
+    Cp = -(-shape[1] // 64) * 64
+    xp = jnp.pad(x, ((0, Rp - shape[0]), (0, Cp - shape[1])))
+    _, s = quantize_with_stats(xp, m, (64, 64))
+    assert int(clip_count.sum()) == int(round(float(s.clip_frac * s.n)))
+    assert int(emax.max() - emin.min()) == int(float(s.exp_spread))
+
+
+@pytest.mark.parametrize("shape", [(128, 256), (100, 130)])
+def test_ops_bfp_quantize_wrapper(shape):
+    """The public ops wrapper: (m, e) matches the oracle on divisible AND
+    pad-and-slice shapes; with_stats=True appends the aggregate dict."""
+    x = jax.random.normal(jax.random.key(shape[1]), shape) * 3.0
+    mk, ek = ops.bfp_quantize(x, mantissa_bits=4, tile=64)
+    mr, er = ref.bfp_quantize_ref(x, 0, mantissa_bits=4, tile_r=64,
+                                  tile_c=64)
+    assert mk.shape == shape
+    np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(er))
+    m2, e2, stats = ops.bfp_quantize(x, mantissa_bits=4, tile=64,
+                                     with_stats=True)
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(mk))
+    np.testing.assert_array_equal(np.asarray(e2), np.asarray(ek))
+    assert int(stats["exp_spread"]) == int(ek.max() - ek.min())
+    assert float(stats["clip_frac"]) == float(stats["clip_count"]) / x.size
+    # aggregate clip count == the observatory's element clip on same tiling
+    from repro.numerics.stats import quantize_with_stats
+    Rp, Cp = -(-shape[0] // 64) * 64, -(-shape[1] // 64) * 64
+    xp = jnp.pad(x, ((0, Rp - shape[0]), (0, Cp - shape[1])))
+    _, s = quantize_with_stats(xp, 4, (64, 64))
+    assert int(stats["clip_count"]) == int(round(float(s.clip_frac * s.n)))
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("m", [4, 8])
 def test_quantize_kernel_stochastic(m):
     x = jax.random.normal(jax.random.key(0), (128, 128)) * 0.7
@@ -50,6 +101,7 @@ MM_CASES = [
 ]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("case", MM_CASES)
 @pytest.mark.parametrize("m", [8, 12])
 @pytest.mark.parametrize("stochastic", [False, True])
@@ -124,6 +176,7 @@ def test_int8_path_exactness():
                                rtol=1e-6)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("m", [8, 12])
 @pytest.mark.parametrize("shape", [(2, 64, 32), (1, 128, 64), (4, 32, 16)])
 def test_flash_attention_vs_ref(m, shape):
@@ -139,6 +192,7 @@ def test_flash_attention_vs_ref(m, shape):
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-6)
 
 
+@pytest.mark.slow
 def test_flash_attention_matches_naive_fp32_envelope():
     from repro.kernels.hbfp_flash_attn import hbfp_flash_attention
     q = jax.random.normal(jax.random.key(0), (2, 64, 32))
@@ -157,6 +211,7 @@ def test_flash_attention_matches_naive_fp32_envelope():
     assert rel12 < rel8  # accuracy improves with mantissa width
 
 
+@pytest.mark.slow
 def test_flash_attention_non_causal():
     from repro.kernels.hbfp_flash_attn import hbfp_flash_attention
     from repro.kernels.ref import hbfp_flash_attn_ref

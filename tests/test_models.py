@@ -32,6 +32,7 @@ def _mk_batch(arch, B=2, S=16, key=0, labels=True):
     return b
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", arch_ids())
 def test_smoke_forward_and_train_step(arch_id):
     """(f) reduced-config smoke: one forward + one grad step, shapes + no
@@ -55,6 +56,7 @@ def test_smoke_forward_and_train_step(arch_id):
     assert bool(jnp.isfinite(gn)) and float(gn) > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ["yi-9b", "gemma2-2b", "hymba-1.5b",
                                      "xlstm-350m", "qwen2-vl-72b"])
 def test_decode_matches_forward(arch_id):
@@ -82,6 +84,7 @@ def test_decode_matches_forward(arch_id):
     assert err <= 1e-4 * max(scale, 1.0), (err, scale)
 
 
+@pytest.mark.slow
 def test_prefill_cache_matches_decode_cache():
     """prefill(prompt) then decode == decode-only from scratch."""
     arch = get_arch("yi-9b").smoke()
@@ -101,6 +104,7 @@ def test_prefill_cache_matches_decode_cache():
     assert jnp.allclose(cache_p["kv"].k, cache_d["kv"].k, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_sliding_window_masks_old_tokens():
     """A sliding-window arch must ignore tokens beyond the window."""
     arch = dataclasses.replace(get_arch("hymba-1.5b").smoke(), ssm=False,
@@ -158,6 +162,7 @@ def test_hbfp_quantization_changes_but_tracks_fp32():
     assert float(corr) > 0.99, float(corr)
 
 
+@pytest.mark.slow
 def test_bfp_kv_cache_decode():
     """8-bit BFP KV cache (beyond-paper): decode within the hbfp8 error
     envelope of the f32 full forward; cache 2x smaller than bf16."""

@@ -1,0 +1,375 @@
+"""Numerics observatory + adaptive precision controller (DESIGN.md §9):
+stats bit-identity with the production quantizer, controller hysteresis
+(no oscillation on stationary distributions, widen on injected clipping),
+closed-loop training, and replay-identical decisions across checkpoint
+restore."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import HBFPConfig, bfp, narrow_params
+from repro.core.schedule_precision import ResolvedPrecision
+from repro.data import SyntheticLM
+from repro.models import init_params
+from repro.numerics import (ControllerConfig, PrecisionController, RingBuffer,
+                            TapConfig, make_adaptive_train_step,
+                            narrow_params_with_stats, quantize_with_stats,
+                            stats_to_host)
+from repro.numerics.collect import grad_stats, weight_stats
+from repro.numerics.controller import merge_sources
+from repro.optim import make_schedule
+from repro.train import init_train_state, make_train_step
+from repro.train.trainer import Trainer
+
+
+# ---------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rounding", ["nearest", "stochastic"])
+@pytest.mark.parametrize("tile", [(1, None), (64, 64), (None, None), (24, 24)])
+def test_quantize_with_stats_bit_identical(rounding, tile):
+    """The stats path returns the exact tensor bfp.quantize returns —
+    telemetry never perturbs the computation."""
+    x = jax.random.normal(jax.random.key(3), (100, 130)) * 2.7
+    key = jax.random.key(9) if rounding == "stochastic" else None
+    q1 = bfp.quantize(x, 4, tile, rounding, key)
+    q2, _ = quantize_with_stats(x, 4, tile, rounding, key)
+    assert jnp.array_equal(q1, q2)
+
+
+def test_stats_values_track_width_and_outliers():
+    w = jax.random.normal(jax.random.key(1), (128, 256))
+    host = {m: stats_to_host(quantize_with_stats(
+        w, m, bfp.weight_tile_shape(2, 64))[1]) for m in (4, 8, 12)}
+    # each mantissa bit buys ~6 dB of SQNR; FTZ shrinks with width
+    assert host[4]["sqnr_db"] < host[8]["sqnr_db"] < host[12]["sqnr_db"]
+    assert host[8]["sqnr_db"] - host[4]["sqnr_db"] > 15
+    assert host[4]["ftz_frac"] > host[8]["ftz_frac"] > host[12]["ftz_frac"]
+    assert host[4]["n"] == 128 * 256
+    assert sum(host[4]["exp_hist"]) == (128 // 64) * (256 // 64)
+    # an injected outlier inflates the tile exponent → mass flushes to zero
+    # (SQNR stays high — signal power is dominated by the well-represented
+    # outlier — which is exactly why FTZ is tracked as its own signal)
+    w_out = w.at[0, 0].set(1e4)
+    s = stats_to_host(quantize_with_stats(w_out, 4, (None, None))[1])
+    assert s["ftz_frac"] > 0.9
+    assert s["exp_spread"] == 0.0  # single tile
+
+
+def test_identity_width_is_lossless():
+    x = jax.random.normal(jax.random.key(0), (32, 32))
+    q, s = quantize_with_stats(x, 24, (None, None))
+    assert jnp.array_equal(q, x)
+    assert float(s.sqnr_db) == 200.0 and float(s.clip_frac) == 0.0
+
+
+@pytest.mark.slow
+def test_narrow_params_with_stats_matches_narrow_params():
+    """Tree-level weight tap: identical narrow copy, one TensorStats per
+    BFP weight, FP-exempt params untouched and unmeasured."""
+    arch = get_arch("yi-9b").smoke()
+    params = init_params(jax.random.key(0), arch)
+    rp = ResolvedPrecision(
+        global_cfg=HBFPConfig(4, 16),
+        overrides=(("head_w", HBFPConfig(12, 16)),))
+    plain = narrow_params(params, rp)
+    tapped, stats = narrow_params_with_stats(params, rp)
+    for a, b in zip(jax.tree.leaves(plain), jax.tree.leaves(tapped)):
+        assert jnp.array_equal(a, b)
+    assert "head_w" in stats and "layers/ffn_wg" in stats
+    assert not any("norm" in k or "embed" in k for k in stats)
+    # the 12-bit override really is measured at 12 bits
+    h = stats_to_host(stats)
+    assert h["head_w"]["sqnr_db"] > h["layers/ffn_wg"]["sqnr_db"] + 20
+
+
+def test_weight_and_grad_stats_cover_same_layers():
+    arch = get_arch("yi-9b").smoke()
+    params = init_params(jax.random.key(0), arch)
+    grads = jax.tree.map(lambda p: p * 0.01, params)
+    ws = weight_stats(params, HBFPConfig(8, 16))
+    gs = grad_stats(grads, HBFPConfig(8, 16))
+    assert set(ws) == set(gs) and len(ws) > 0
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+
+def _obs(sqnr, clip=0.0, ftz=0.0):
+    return {"sqnr_db": sqnr, "clip_frac": clip, "sat_tile_frac": clip,
+            "ftz_frac": ftz}
+
+
+def test_controller_widens_on_injected_clipping():
+    """Injected clipping above threshold fires a widen (after `patience`
+    consecutive observations), attributed to the clip signal."""
+    c = PrecisionController(ControllerConfig(patience=2, cooldown=1),
+                            base_bits=4)
+    assert c.observe(0, {"l": _obs(sqnr=30.0, clip=0.2)}) == []  # 1st vote
+    d = c.observe(1, {"l": _obs(sqnr=30.0, clip=0.2)})
+    assert len(d) == 1 and d[0]["action"] == "widen"
+    assert d[0]["reason"] == "clip>thr" and d[0]["to"] == 8
+    assert c.width("l") == 8 and c.overrides() == (("l", 8),)
+    # a single out-of-band blip (patience not reached) does nothing
+    c2 = PrecisionController(ControllerConfig(patience=3), base_bits=4)
+    for i in range(2):
+        assert c2.observe(i, {"l": _obs(sqnr=5.0)}) == []
+    assert c2.observe(2, {"l": _obs(sqnr=50.0)}) == []  # streak broken
+    assert c2.width("l") == 4
+
+
+def test_controller_widen_on_sqnr_floor_and_narrow_on_headroom():
+    c = PrecisionController(ControllerConfig(patience=1, cooldown=0),
+                            base_bits=8)
+    d = c.observe(0, {"l": _obs(sqnr=10.0)})
+    assert d[0]["reason"] == "sqnr<floor" and c.width("l") == 12
+    c = PrecisionController(ControllerConfig(patience=1, cooldown=0),
+                            base_bits=12)
+    d = c.observe(0, {"l": _obs(sqnr=60.0)})  # > 20 + 6.02*5
+    assert d[0]["action"] == "narrow" and c.width("l") == 8
+
+
+def test_controller_widens_on_flush_to_zero():
+    """The outlier-crushed-tile failure mode: SQNR high (outlier dominates
+    signal power), zero clipping, but most nonzero mass flushed to zero —
+    only the FTZ signal sees it, and it must both fire a widen and block
+    the headroom narrow."""
+    c = PrecisionController(ControllerConfig(patience=1, cooldown=0),
+                            base_bits=4)
+    d = c.observe(0, {"l": _obs(sqnr=80.0, ftz=0.95)})
+    assert d[0]["action"] == "widen" and d[0]["reason"] == "ftz>thr"
+    assert c.width("l") == 8
+    # FTZ inside the widen band but above the deadband: no narrow either
+    c = PrecisionController(ControllerConfig(patience=1, cooldown=0),
+                            base_bits=8)
+    for i in range(5):
+        c.observe(i, {"l": _obs(sqnr=80.0, ftz=0.3)})  # thr/4 < 0.3 < thr
+    assert c.width("l") == 8 and c.log == []
+
+
+def test_controller_hysteresis_never_oscillates_on_stationary():
+    """Closed loop against a FIXED tensor: stats are recomputed at the
+    controller's current width each observation (exactly what the adaptive
+    step does). The width trace must reach a fixed point with at most one
+    direction change — the deadband + ratchet contract."""
+    w = jax.random.normal(jax.random.key(5), (96, 96)) * 1.7
+    for base in (4, 8, 12, 16):
+        c = PrecisionController(ControllerConfig(patience=1, cooldown=0),
+                                base_bits=base)
+        trace = [base]
+        for step in range(30):
+            m = c.width("l")
+            s = stats_to_host(quantize_with_stats(
+                w, m, bfp.weight_tile_shape(2, 24))[1])
+            c.observe(step, {"l": s})
+            trace.append(c.width("l"))
+        # converged: the tail is constant
+        assert len(set(trace[-10:])) == 1, (base, trace)
+        # never oscillates: at most one direction change over the whole run
+        dirs = [b - a for a, b in zip(trace, trace[1:]) if b != a]
+        changes = sum(1 for a, b in zip(dirs, dirs[1:]) if (a > 0) != (b > 0))
+        assert changes <= 1, (base, trace)
+
+
+def test_controller_ratchet_blocks_renarrowing():
+    """Once widened away from a width for cause, a layer never narrows back
+    below the widened-to width, even under absurd headroom readings."""
+    c = PrecisionController(ControllerConfig(patience=1, cooldown=0),
+                            base_bits=4)
+    c.observe(0, {"l": _obs(sqnr=5.0)})          # widen 4 -> 8
+    assert c.width("l") == 8
+    for i in range(1, 10):
+        c.observe(i, {"l": _obs(sqnr=199.0)})    # huge headroom
+    assert c.width("l") == 8                      # pinned by the ratchet
+
+
+def test_controller_overrides_resolve_by_exact_name():
+    """Controller overrides are full parameter names and resolve exactly —
+    widening one layer must not substring-capture a longer-named sibling
+    (schedule overrides keep their first-match substring semantics)."""
+    c = PrecisionController(ControllerConfig(patience=1, cooldown=0),
+                            base_bits=4)
+    c.observe(0, {"layers/ffn_w": _obs(sqnr=5.0)})   # widen 4 -> 8
+    rp = c.resolved(HBFPConfig(4, 16))
+    assert rp.exact
+    assert rp.for_param("layers/ffn_w").mantissa_bits == 8
+    assert rp.for_param("layers/ffn_w2").mantissa_bits == 4   # untouched
+    # hand-written schedules still match by fragment
+    sub = ResolvedPrecision(global_cfg=HBFPConfig(4, 16),
+                            overrides=(("ffn_w", HBFPConfig(8, 16)),))
+    assert sub.for_param("layers/ffn_w2").mantissa_bits == 8
+
+
+def test_controller_meta_roundtrip_through_json():
+    c = PrecisionController(ControllerConfig(patience=1, cooldown=0),
+                            base_bits=4)
+    c.observe(0, {"a": _obs(5.0), "b": _obs(30.0, clip=0.5)})
+    c.observe(1, {"a": _obs(5.0)})
+    meta = json.loads(json.dumps(c.to_meta()))
+    c2 = PrecisionController.from_meta(meta)
+    assert c2.widths == c.widths and c2.log == c.log
+    assert c2.config == c.config and c2.base_bits == c.base_bits
+    # restored controller continues identically
+    d1 = c.observe(2, {"a": _obs(5.0), "b": _obs(30.0)})
+    d2 = c2.observe(2, {"a": _obs(5.0), "b": _obs(30.0)})
+    assert d1 == d2
+
+
+def test_merge_sources_takes_worst_case():
+    snap = {"weights": {"l": _obs(40.0, clip=0.01)},
+            "grads": {"l": _obs(12.0, clip=0.2)},
+            "acts": {"embed_out": _obs(50.0)}}
+    m = merge_sources(snap)
+    assert m["l"]["sqnr_db"] == 12.0 and m["l"]["sat_tile_frac"] == 0.2
+    assert "embed_out" not in m  # act taps are global, not per-layer
+
+
+def test_ring_buffer_bounded():
+    rb = RingBuffer(maxlen=3)
+    for i in range(7):
+        rb.append(i, {"x": i})
+    assert len(rb) == 3
+    assert rb.latest() == (6, {"x": 6})
+    assert [s for s, _ in rb.history()] == [4, 5, 6]
+
+
+# ---------------------------------------------------------------------------
+# closed loop
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def loop_setup():
+    arch = get_arch("yi-9b").smoke()
+    pipe = SyntheticLM(arch.vocab_size, 17, 4, seed=3)
+    lrs = make_schedule("constant", base_lr=2e-3, warmup_steps=2,
+                        total_steps=30)
+    return arch, pipe, lrs
+
+
+@pytest.mark.slow
+def test_telemetry_off_and_on_bit_identical_to_static(loop_setup):
+    """Acceptance: cadence=None is bit-identical to the plain train step;
+    and with telemetry ON but no decisions firing, the *training
+    computation* is still bit-identical (stats are pure side outputs)."""
+    arch, pipe, lrs = loop_setup
+    base = HBFPConfig(8, 16)
+    static = jax.jit(make_train_step(arch, base, lrs))
+
+    quiet = ControllerConfig(patience=10 ** 6)  # never acts
+    runs = {}
+    for name, cadence in (("off", None), ("on", 1)):
+        ctrl = PrecisionController(quiet, base_bits=8)
+        step = make_adaptive_train_step(
+            arch, base, lrs, controller=ctrl, tap=TapConfig(cadence=cadence))
+        s = init_train_state(jax.random.key(0), arch, init_params)
+        for i in range(3):
+            k = jax.random.fold_in(jax.random.key(1), i)
+            s, m = step(s, pipe.batch(i), k)
+        runs[name] = (s, float(m["loss"]))
+        if cadence == 1:
+            assert len(step.buffer) == 3  # telemetry actually collected
+
+    s_ref = init_train_state(jax.random.key(0), arch, init_params)
+    for i in range(3):
+        k = jax.random.fold_in(jax.random.key(1), i)
+        s_ref, m_ref = static(s_ref, pipe.batch(i), k)
+
+    for name, (s, loss) in runs.items():
+        assert loss == float(m_ref["loss"]), name
+        for a, b in zip(jax.tree.leaves(s.params),
+                        jax.tree.leaves(s_ref.params)):
+            assert jnp.array_equal(a, b), name
+
+
+@pytest.mark.slow
+def test_adaptive_loop_survives_all_taps_disabled(loop_setup):
+    """A collect step with every tap disabled has nothing to observe and
+    must not crash (regression: KeyError 'numerics')."""
+    arch, pipe, lrs = loop_setup
+    ctrl = PrecisionController(base_bits=8)
+    step = make_adaptive_train_step(
+        arch, HBFPConfig(8, 16), lrs, controller=ctrl,
+        tap=TapConfig(cadence=1, weights=False, grads=False, acts=False))
+    s = init_train_state(jax.random.key(0), arch, init_params)
+    s, m = step(s, pipe.batch(0), jax.random.key(1))
+    assert jnp.isfinite(m["loss"]) and len(step.buffer) == 0
+
+
+@pytest.mark.slow
+def test_adaptive_loop_widens_and_reuses_variants(loop_setup):
+    arch, pipe, lrs = loop_setup
+    base = HBFPConfig(4, 16, tile=24)
+    ctrl = PrecisionController(ControllerConfig(patience=1, cooldown=1),
+                               base_bits=4)
+    step = make_adaptive_train_step(arch, base, lrs, controller=ctrl,
+                                    tap=TapConfig(cadence=2))
+    s = init_train_state(jax.random.key(0), arch, init_params)
+    for i in range(6):
+        s, m = step(s, pipe.batch(i), jax.random.fold_in(jax.random.key(1),
+                                                         i))
+        assert jnp.isfinite(m["loss"])
+    assert len(ctrl.log) > 0 and any(d["action"] == "widen"
+                                     for d in ctrl.log)
+    assert int(float(m["n_overrides"])) == len(ctrl.overrides()) > 0
+    # variants cached per (override-state, telemetry) — far fewer than steps
+    assert len(step.variants) <= 2 * (len(ctrl.log) + 1)
+
+
+@pytest.mark.slow
+def test_adaptive_decisions_bit_identical_across_restore(tmp_path,
+                                                         loop_setup):
+    """Acceptance: preempt an adaptive run mid-flight; the resumed run's
+    decision log, controller state, and final params are bit-identical to
+    the uninterrupted run."""
+    arch, pipe, lrs = loop_setup
+    base = HBFPConfig(4, 16, tile=24)
+    cconf = ControllerConfig(patience=2, cooldown=1)
+
+    def build():
+        ctrl = PrecisionController(cconf, base_bits=4)
+        step = make_adaptive_train_step(arch, base, lrs, controller=ctrl,
+                                        tap=TapConfig(cadence=3))
+        return step, ctrl
+
+    # uninterrupted reference
+    step_a, ctrl_a = build()
+    tr = Trainer(train_step=step_a,
+                 init_state=init_train_state(jax.random.key(0), arch,
+                                             init_params),
+                 data_fn=pipe.batch, ckpt_dir=None, hbfp=base,
+                 controller=ctrl_a, seed=0)
+    s_straight, _ = tr.run(20, log_every=0)
+
+    # preempted + resumed
+    d = str(tmp_path / "ckpt")
+    step_b, ctrl_b = build()
+    tr1 = Trainer(train_step=step_b,
+                  init_state=init_train_state(jax.random.key(0), arch,
+                                              init_params),
+                  data_fn=pipe.batch, ckpt_dir=d, ckpt_every=9, hbfp=base,
+                  controller=ctrl_b, seed=0)
+    with pytest.raises(RuntimeError, match="simulated preemption"):
+        tr1.run(20, fail_at_step=14, log_every=0)
+
+    step_c, ctrl_c = build()   # fresh process: empty controller
+    tr2 = Trainer(train_step=step_c,
+                  init_state=init_train_state(jax.random.key(0), arch,
+                                              init_params),
+                  data_fn=pipe.batch, ckpt_dir=d, ckpt_every=9, hbfp=base,
+                  controller=ctrl_c, seed=0)
+    assert tr2.start_step == 9
+    assert ctrl_c.log == [e for e in ctrl_a.log if e["step"] < 9]
+    s_resumed, _ = tr2.run(20, log_every=0)
+
+    assert ctrl_c.log == ctrl_a.log          # identical decision stream
+    assert ctrl_c.widths == ctrl_a.widths
+    assert ctrl_c.to_meta() == ctrl_a.to_meta()
+    for a, b in zip(jax.tree.leaves(s_resumed.params),
+                    jax.tree.leaves(s_straight.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -114,6 +114,7 @@ def test_from_spec_dsl():
     assert ps.resolve(0, "lm_head").mantissa_bits == 12
 
 
+@pytest.mark.slow
 def test_constant_schedule_bit_identical_to_static():
     """Acceptance: a constant-m schedule reproduces the static
     HBFPConfig(mantissa_bits=m) path bit-for-bit (params and losses)."""
@@ -136,6 +137,7 @@ def test_constant_schedule_bit_identical_to_static():
     assert len(sched.variants) == 1  # one segment ⇒ one compiled variant
 
 
+@pytest.mark.slow
 def test_staircase_run_switches_width_and_compiles_per_segment():
     arch = get_arch("yi-9b").smoke()
     pipe = SyntheticLM(arch.vocab_size, 17, 4, seed=5)

@@ -1,7 +1,11 @@
 """Continuous-batching serving engine: correctness under mid-flight
-admission, lane reuse, and determinism vs isolated generation."""
+admission, lane reuse, pending-queue overload, and determinism vs isolated
+generation."""
 import jax
 import pytest
+
+# decode-loop integration tests — excluded from the fast CI lane
+pytestmark = pytest.mark.slow
 
 from repro.configs import get_arch
 from repro.core import HBFP8_16
@@ -57,14 +61,75 @@ def test_lane_reuse(setup):
     arch, params = setup
     eng = ServeEngine(arch, params, HBFP8_16, max_batch=1, ctx_len=32)
     r1 = eng.submit([3, 1], max_new_tokens=2)
-    with pytest.raises(RuntimeError, match="no free lanes"):
-        eng.submit([4], max_new_tokens=1)
     while any(eng.slots):
         eng.step()
     r2 = eng.submit([4], max_new_tokens=2)   # lane freed and reused
     assert r2 == r1 + 1
     while any(eng.slots):
         eng.step()
+
+
+def test_pending_queue_overload(setup):
+    """Overload admission: submits beyond max_batch queue FIFO, drain as
+    lanes free, and produce exactly the isolated-generation outputs."""
+    arch, params = setup
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=1, ctx_len=64)
+    prompts = {eng.submit([3, 1], max_new_tokens=3): [3, 1],
+               eng.submit([5, 9, 2], max_new_tokens=4): [5, 9, 2],
+               eng.submit([7, 7], max_new_tokens=2): [7, 7]}
+    assert len(eng.pending) == 2          # one lane busy, two queued
+    res = eng.drain()
+    assert not eng.pending and not any(eng.slots)
+    assert sorted(res) == sorted(prompts)  # every queued request completed
+    for rid, prompt in prompts.items():
+        want = _gen_isolated(arch, params, prompt, len(res[rid]))
+        assert res[rid] == want, rid
+
+
+def test_pending_queue_preserves_fifo_order(setup):
+    """A submit arriving while the queue is non-empty goes behind it; on a
+    lane free the head of the queue is admitted first (no overtaking)."""
+    arch, params = setup
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=1, ctx_len=32)
+    r1 = eng.submit([1], max_new_tokens=2)
+    r2 = eng.submit([2], max_new_tokens=2)       # queued: lane busy
+    r3 = eng.submit([3], max_new_tokens=2)       # queued behind r2
+    assert [r for r, _, _ in eng.pending] == [r2, r3]
+    out = eng.step()                              # r1 finishes, lane frees
+    assert r1 in out
+    assert r2 in out and r3 not in out            # r2 admitted first (FIFO)
+    assert [r for r, _, _ in eng.pending] == [r3]
+    res = eng.drain()   # r1 already completed and was delivered via step()
+    assert len(res[r2]) == 2 and len(res[r3]) == 2
+
+
+def test_single_token_and_oversized_requests(setup):
+    """max_new_tokens=1 completes at admission without occupying a lane;
+    an over-length prompt is rejected at submit even when it would queue."""
+    arch, params = setup
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=1, ctx_len=32)
+    r1 = eng.submit([3, 1], max_new_tokens=1)
+    assert not any(eng.slots)                 # finished at admission
+    r2 = eng.submit([4, 2], max_new_tokens=2)
+    with pytest.raises(ValueError, match="prompt length"):  # pre-queue check
+        eng.submit(list(range(40)), max_new_tokens=2)
+    res = eng.drain()
+    assert len(res[r1]) == 1 and len(res[r2]) == 2
+
+
+def test_at_admission_completion_delivered_by_step(setup):
+    """A step()-polling consumer (never calling drain) sees a request that
+    completed at admission: its token arrives in the next step(), exactly
+    once, and the engine retains no record of it afterwards."""
+    arch, params = setup
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=32)
+    r1 = eng.submit([3, 1], max_new_tokens=1)    # completes at admission
+    r2 = eng.submit([4, 2], max_new_tokens=3)
+    out = eng.step()
+    assert r1 in out and r2 in out
+    assert not eng._finished                      # delivered, not retained
+    while any(eng.slots):
+        assert r1 not in eng.step()               # and never re-delivered
 
 
 def test_bfp_kv_cache_serving(setup):

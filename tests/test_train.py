@@ -50,6 +50,7 @@ def test_narrow_excludes_fp_params():
                if "router" in n or "embed" in n or "norm" in n)
 
 
+@pytest.mark.slow
 def test_loss_decreases_hbfp_and_fp32():
     """Both FP32 and HBFP8_16 learn the markov stream (paper: drop-in)."""
     arch = get_arch("yi-9b").smoke()
@@ -73,6 +74,7 @@ def test_loss_decreases_hbfp_and_fp32():
     assert abs(results["hbfp8_16"][1] - results["fp32"][1]) < 0.35, results
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     import dataclasses
     arch = dataclasses.replace(get_arch("yi-9b").smoke(), dtype="float32")

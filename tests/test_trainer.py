@@ -2,6 +2,11 @@
 packed (BFP-compressed) checkpoints, retention."""
 import os
 
+import pytest as _pytest
+
+# multi-run training integration tests — excluded from the fast CI lane
+pytestmark = _pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 import numpy as np
