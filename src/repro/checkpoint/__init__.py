@@ -1,3 +1,4 @@
+"""Atomic, mesh-independent, BFP-packable checkpoints (DESIGN.md §6)."""
 from repro.checkpoint.checkpointing import (latest_step, latest_steps,
                                             load_checkpoint, load_precision,
                                             save_checkpoint)

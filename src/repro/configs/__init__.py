@@ -1,1 +1,2 @@
+"""ArchConfig registry: 10 published architectures + smoke variants."""
 from repro.configs.base import ArchConfig, arch_ids, get_arch

@@ -66,6 +66,12 @@ class ArchConfig:
     loss_chunk: int = 2048     # CE chunking (0 = off); bounds f32 logits temp
     ssm_unroll: bool = False   # python-unroll SSD/mLSTM chunk scans (roofline)
     bfp_kv_cache: bool = False  # 8-bit BFP K/V cache (beyond-paper, serving)
+    # Dot-product execution backend (DESIGN.md §10): "sim" = quantize ops +
+    # XLA matmul (the paper's GPU-simulation semantics, bit-stable default);
+    # "pallas" = fused quantize-in-VMEM Pallas kernels with custom-VJP
+    # backward GEMMs (kernels/linear.py; interpret mode on CPU). Batched-
+    # weight and activation-rhs contractions fall back to "sim" per call.
+    kernel_backend: str = "sim"
     # HBFP precision schedule (DESIGN.md §8). `hbfp_spec` is a
     # schedule_precision.from_spec string ("8", "4@0,8@90%,16@95%", ...);
     # None ⇒ the driver picks the format (paper default hbfp8_16).

@@ -1,1 +1,2 @@
+"""Synthetic LM data pipelines (stateless, bit-exact resume)."""
 from repro.data.pipeline import SyntheticLM, batch_for_arch

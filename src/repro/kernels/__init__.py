@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels (DESIGN.md §4/§10, docs/KERNELS.md).
+
+Fused FP->BFP conversion + consuming op: standalone quantizer
+(`bfp_quantize.py`), the three training GEMMs (`hbfp_matmul.py`:
+fwd/dgrad/wgrad), flash attention fwd+bwd (`hbfp_flash_attn.py`), the
+custom-VJP training entry point (`linear.py`), the tile autotuner
+(`autotune.py`), public padding/batching wrappers (`ops.py`), and the
+pure-jnp oracles the tests pin every kernel to (`ref.py`).
+"""

@@ -1,0 +1,202 @@
+"""Kernel tile-size autotuner (DESIGN.md §10, docs/KERNELS.md).
+
+The Pallas GEMM kernels take (bm, bk, bn) tile sizes; the best triple
+depends on the problem shape, dtype, and mantissa width (int8 vs f32 MXU
+path), and on the backend (interpret-mode CPU favors few large steps, TPU
+favors MXU-aligned VMEM-resident tiles). This module provides:
+
+  * `candidates(M, K, N)` — the search space: a power-of-two tile menu
+    clipped to the problem, filtered by a double-buffered VMEM estimate;
+  * `TuningTable` — a persisted on-disk JSON table mapping
+    `op/MxKxN/dtype/m<bits>` keys to the winning tiles + timings;
+  * `lookup(op, M, K, N, ...)` — the trace-time entry point `ops.py` and
+    `kernels/linear.py` call when no explicit tiles are given: returns the
+    tuned tiles when the table has the shape, else DEFAULT_TILES clipped;
+  * `autotune_op(...)` — measure every candidate for one op/shape and
+    record the winner.
+
+`benchmarks/kernel_bench.py` drives `autotune_op` over representative
+shapes and records the default-vs-tuned speedups into BENCH_kernels.json;
+the tuning table itself lives at results/autotune_kernels.json (override
+with $REPRO_AUTOTUNE_TABLE).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Iterable, Optional, Tuple
+
+Tiles = Tuple[int, int, int]
+
+DEFAULT_TILES: Tiles = (128, 128, 128)
+TILE_MENU: Tuple[int, ...] = (32, 64, 128, 256)
+# ~16 MB VMEM per core; leave headroom for semaphores/regalloc
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
+TABLE_ENV = "REPRO_AUTOTUNE_TABLE"
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+DEFAULT_TABLE_PATH = os.path.join(_ROOT, "results", "autotune_kernels.json")
+
+
+def table_path() -> str:
+    return os.environ.get(TABLE_ENV, DEFAULT_TABLE_PATH)
+
+
+def cache_key(op: str, M: int, K: int, N: int, dtype: str,
+              mantissa_bits: int) -> str:
+    """Table key: one entry per (op, logical shape, dtype, mantissa width).
+    The shape is the *logical* (M, K, N) of the GEMM — padding to tile
+    multiples happens downstream and depends on the chosen tiles."""
+    return f"{op}/{M}x{K}x{N}/{dtype}/m{mantissa_bits}"
+
+
+def clip_tiles(tiles: Iterable[int], M: int, K: int, N: int) -> Tiles:
+    bm, bk, bn = tiles
+    return (min(int(bm), M), min(int(bk), K), min(int(bn), N))
+
+
+def vmem_bytes(bm: int, bk: int, bn: int, itemsize: int = 4) -> int:
+    """Double-buffered operand blocks + one f32 accumulator scratch."""
+    operands = (bm * bk + bk * bn + bm * bn) * itemsize * 2
+    return operands + bm * bn * 4
+
+
+def candidates(M: int, K: int, N: int, *,
+               menu: Tuple[int, ...] = TILE_MENU,
+               budget: int = VMEM_BUDGET_BYTES) -> Tuple[Tiles, ...]:
+    """Distinct (bm, bk, bn) triples: the menu clipped to the problem dims,
+    VMEM-feasible, deduplicated (clipping collapses oversized entries)."""
+    out = []
+    seen = set()
+    for bm in menu:
+        for bk in menu:
+            for bn in menu:
+                t = clip_tiles((bm, bk, bn), M, K, N)
+                if t in seen or vmem_bytes(*t) > budget:
+                    continue
+                seen.add(t)
+                out.append(t)
+    return tuple(out)
+
+
+class TuningTable:
+    """On-disk tile-tuning table. JSON object: {key: entry} where entry is
+    {"tiles": [bm, bk, bn], "us": winner_us, "default_us": us at
+    DEFAULT_TILES, "speedup": default_us/us, "backend": ..., "n_candidates":
+    ...}. Unknown extra fields are preserved."""
+
+    def __init__(self, entries: Optional[Dict[str, dict]] = None,
+                 path: Optional[str] = None):
+        self.entries: Dict[str, dict] = dict(entries or {})
+        self.path = path or table_path()
+
+    @classmethod
+    def load(cls, path: Optional[str] = None) -> "TuningTable":
+        path = path or table_path()
+        entries: Dict[str, dict] = {}
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    entries = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                entries = {}  # corrupt table ⇒ behave as untuned
+        return cls(entries, path)
+
+    def get(self, key: str) -> Optional[Tiles]:
+        e = self.entries.get(key)
+        if not e or "tiles" not in e or len(e["tiles"]) != 3:
+            return None
+        return tuple(int(t) for t in e["tiles"])
+
+    def put(self, key: str, tiles: Iterable[int], **meta) -> None:
+        self.entries[key] = {"tiles": [int(t) for t in tiles], **meta}
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.entries, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)  # atomic, like checkpointing (DESIGN.md §6)
+        return path
+
+
+_CACHED: Optional[TuningTable] = None
+_CACHED_PATH: Optional[str] = None
+
+
+def get_table(refresh: bool = False) -> TuningTable:
+    """Process-wide cached table (ops.py hits this at every trace)."""
+    global _CACHED, _CACHED_PATH
+    p = table_path()
+    if refresh or _CACHED is None or _CACHED_PATH != p:
+        _CACHED = TuningTable.load(p)
+        _CACHED_PATH = p
+    return _CACHED
+
+
+def invalidate_cache() -> None:
+    global _CACHED, _CACHED_PATH
+    _CACHED = None
+    _CACHED_PATH = None
+
+
+def lookup(op: str, M: int, K: int, N: int, *, dtype: str = "float32",
+           mantissa_bits: int = 8) -> Tiles:
+    """Trace-time tile resolution: tuned tiles if the table has this
+    (op, shape, dtype, m) cell, else DEFAULT_TILES — always clipped to the
+    problem so small shapes stay single-block."""
+    t = get_table().get(cache_key(op, M, K, N, dtype, mantissa_bits))
+    return clip_tiles(t or DEFAULT_TILES, M, K, N)
+
+
+def _time_us(fn, n: int = 3, warmup: int = 1) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def autotune_op(op: str, run_fn, M: int, K: int, N: int, *,
+                dtype: str = "float32", mantissa_bits: int = 8,
+                table: Optional[TuningTable] = None,
+                menu: Tuple[int, ...] = TILE_MENU,
+                n: int = 3, save: bool = True, log=None):
+    """Search tiles for one GEMM. `run_fn(tiles)` must execute the kernel
+    once with those tiles (the harness times it, min-of-n). Records the
+    winner into the table (and saves it) and returns (best_tiles, report)
+    where report carries per-candidate timings plus the default-tiling
+    baseline for the speedup accounting."""
+    import jax
+    table = table or get_table()
+    cands = candidates(M, K, N, menu=menu)
+    default = clip_tiles(DEFAULT_TILES, M, K, N)
+    if default not in cands:
+        cands = (default,) + cands
+    timings = {}
+    for t in cands:
+        timings[t] = _time_us(lambda t=t: run_fn(t), n=n)
+        if log:
+            log(f"    {op} {M}x{K}x{N} tiles={t}: {timings[t]:9.1f} us")
+    best = min(timings, key=timings.get)
+    report = {
+        "tiles": list(best), "us": round(timings[best], 1),
+        "default_tiles": list(default),
+        "default_us": round(timings[default], 1),
+        "speedup": round(timings[default] / timings[best], 3),
+        "backend": jax.default_backend(),
+        "n_candidates": len(cands),
+    }
+    table.put(cache_key(op, M, K, N, dtype, mantissa_bits), best,
+              **{k: v for k, v in report.items() if k != "tiles"})
+    if save:
+        table.save()
+        invalidate_cache()  # subsequent lookups see the new entry
+    return best, report

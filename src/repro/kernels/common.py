@@ -13,6 +13,17 @@ import jax.numpy as jnp
 EXP_FLOOR = -100
 EXP_CEIL = 126
 
+# Stochastic-rounding stream offsets: each operand of the three training
+# GEMMs draws from a disjoint region of the counter-based xorshift stream,
+# keyed by the GLOBAL element index (row * row_stride + col) plus the
+# operand's offset. Re-quantizing the same tensor in another GEMM (x in
+# fwd and wgrad, g in dgrad and wgrad) therefore replays the identical
+# draws — "quantize once, use everywhere" without materializing the
+# quantized copy (see docs/KERNELS.md).
+STREAM_X = 0x00000000
+STREAM_G = 0x20000000
+STREAM_W = 0x40000000
+
 
 def max_exponent(amax: jax.Array) -> jax.Array:
     """floor(log2 amax) by f32 bit-field extraction (kernel-safe)."""

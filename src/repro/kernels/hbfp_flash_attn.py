@@ -16,10 +16,29 @@ Per (q-block, k-block) step:
 
 Causal masking by absolute position; fully-masked k-blocks short-circuit.
 Oracle: ref.hbfp_flash_attn_ref (bit-exact, shared quantize_block).
+
+Training path (docs/KERNELS.md, DESIGN.md §10): `flash_attention_vjp` is a
+jax.custom_vjp whose backward is two further fused Pallas kernels (the
+standard two-pass flash backward — one producing dQ, one producing dK/dV),
+each recomputing the probabilities from the forward's saved logsumexp and
+running its dot products in BFP:
+
+    s  = Q(q·α)·Q(k)^T        (idempotent with the forward's quantization)
+    p  = exp(s − lse)          FP (range-sensitive)
+    dp = Q(do)·Q(v)^T          int8 path (row scales factor per output)
+    ds = p ∘ (dp − D)          FP
+    dv += Q(p)^T ⊙ Q(do)       FP accumulate (scales ride the q contraction)
+    dk += Q(ds)^T ⊙ Q(q·α)     FP accumulate
+    dq += Q(ds) ⊙ Q(k) · α     FP accumulate
+
+where D = rowsum(do ∘ o) is precomputed outside (elementwise, FP side).
+Oracle: ref.hbfp_flash_attn_vjp_ref (bit-exact, same blocking and
+accumulation order).
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -41,8 +60,13 @@ def _qdot(a, b, m_bits):
                                preferred_element_type=jnp.float32)
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  m_bits, bq, bk, hd, n_k, scale, causal):
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest,
+                  m_bits, bq, bk, hd, n_k, scale, causal, with_lse):
+    if with_lse:
+        lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        lse_ref = None
+        m_ref, l_ref, acc_ref = rest
     kb = pl.program_id(2)
 
     @pl.when(kb == 0)
@@ -91,21 +115,32 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _done():
         o_ref[0] = (acc_ref[...] /
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        if with_lse:
+            lse_ref[0, :] = (m_ref[...] +
+                             jnp.log(jnp.maximum(l_ref[...], 1e-30)))[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("m_bits", "bq", "bk", "causal",
-                                             "interpret"))
+                                             "with_lse", "interpret"))
 def hbfp_flash_attention(q, k, v, *, m_bits: int = 8, bq: int = 128,
                          bk: int = 128, causal: bool = True,
-                         interpret: bool = False):
-    """q,k,v: [BH, S, hd] (flattened batch×heads). Returns [BH, S, hd]."""
+                         with_lse: bool = False, interpret: bool = False):
+    """q,k,v: [BH, S, hd] (flattened batch×heads). Returns [BH, S, hd], or
+    (out, lse [BH, S] f32) when with_lse — the per-row logsumexp of the
+    scaled BFP scores, saved by the custom VJP for the backward pass."""
     BH, S, hd = q.shape
     bq, bk = min(bq, S), min(bk, S)
     assert S % bq == 0 and S % bk == 0, (S, bq, bk)
     n_k = S // bk
     scale = 1.0 / (hd ** 0.5)
     kernel = functools.partial(_flash_kernel, m_bits=m_bits, bq=bq, bk=bk,
-                               hd=hd, n_k=n_k, scale=scale, causal=causal)
+                               hd=hd, n_k=n_k, scale=scale, causal=causal,
+                               with_lse=with_lse)
+    out_shape = jax.ShapeDtypeStruct((BH, S, hd), q.dtype)
+    out_spec = pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0))
+    if with_lse:
+        out_shape = [out_shape, jax.ShapeDtypeStruct((BH, S), jnp.float32)]
+        out_spec = [out_spec, pl.BlockSpec((1, bq), lambda b, i, j: (b, i))]
     return pl.pallas_call(
         kernel,
         grid=(BH, S // bq, n_k),
@@ -114,10 +149,219 @@ def hbfp_flash_attention(q, k, v, *, m_bits: int = 8, bq: int = 128,
             pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
             pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        out_specs=out_spec,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, 1), jnp.float32),
                         pltpu.VMEM((bq, hd), jnp.float32)],
         interpret=interpret,
     )(q, k, v)
+
+
+# ----------------------------------------------------------------------------
+# Backward kernels (two-pass flash backward, all dot products BFP)
+# ----------------------------------------------------------------------------
+
+def _recompute_p(q, k, lse, qb, kb, m_bits, bq, bk, scale, causal):
+    """Shared by both backward kernels: re-quantize q·α and k exactly as the
+    forward did (idempotent) and rebuild p = exp(s − lse)."""
+    qq, dq = quantize_block(q, m_bits, jnp.abs(q).max(1, keepdims=True),
+                            stochastic=False)
+    kq, dk = quantize_block(k, m_bits, jnp.abs(k).max(1, keepdims=True),
+                            stochastic=False)
+    s = _qdot(qq, kq.T, m_bits) * (dq * dk.T)           # [bq, bk]
+    if causal:
+        qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                       # [bq, bk]
+    return p, (qq, dq), (kq, dk)
+
+
+def _bfp_rows(x, m_bits):
+    """Quantize per row (one exponent per training input over the block's
+    feature axis) and dequantize — the FP-accumulate operand form used when
+    the per-row scales ride the contraction axis."""
+    q, d = quantize_block(x, m_bits, jnp.abs(x).max(1, keepdims=True),
+                          stochastic=False)
+    return q, d
+
+
+def _dsoft(p, do_q, do_d, v, delta, m_bits):
+    """dp = Q(do)·Q(v)^T (int8 path — row scales factor per output cell),
+    then ds = p ∘ (dp − D)."""
+    vq, dv = _bfp_rows(v, m_bits)
+    dp = _qdot(do_q, vq.T, m_bits) * (do_d * dv.T)      # [bq, bk]
+    return p * (dp - delta[:, None])
+
+
+def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                     dq_ref, acc_ref, *, m_bits, bq, bk, hd, n_k, scale,
+                     causal):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qb = pl.program_id(1)
+    run = (not causal) or (kb * bk <= qb * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0]
+        delta = delta_ref[0]
+        p, _, (kq, dk) = _recompute_p(q, k, lse, qb, kb, m_bits, bq, bk,
+                                      scale, causal)
+        do_q, do_d = _bfp_rows(do, m_bits)
+        ds = _dsoft(p, do_q, do_d, v, delta, m_bits)
+        # dq += Q(ds)·k̂ · α — k̂'s per-row scales ride the contraction
+        ds_q, ds_d = _bfp_rows(ds, m_bits)
+        acc_ref[...] += jax.lax.dot_general(
+            ds_q * ds_d, kq * dk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    @pl.when(kb == n_k - 1)
+    def _done():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                      dk_ref, dv_ref, dk_acc, dv_acc, *, m_bits, bq, bk,
+                      hd, n_q, scale, causal):
+    qb = pl.program_id(2)
+
+    @pl.when(qb == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    kb = pl.program_id(1)
+    run = (not causal) or (qb * bq + bq - 1 >= kb * bk)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        do = do_ref[0].astype(jnp.float32)
+        lse = lse_ref[0]
+        delta = delta_ref[0]
+        p, (qq, dq), _ = _recompute_p(q, k, lse, qb, kb, m_bits, bq, bk,
+                                      scale, causal)
+        do_q, do_d = _bfp_rows(do, m_bits)
+        # dv += Q(p)^T·Q(do) — p re-quantized per q-row exactly like the
+        # forward's PV operand; scales ride the q contraction ⇒ f32 path
+        p_q, p_d = _bfp_rows(p, m_bits)
+        dv_acc[...] += jax.lax.dot_general(
+            p_q * p_d, do_q * do_d, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        ds = _dsoft(p, do_q, do_d, v, delta, m_bits)
+        # dk += Q(ds)^T·q̂ (q̂ carries the α scaling from the forward)
+        ds_q, ds_d = _bfp_rows(ds, m_bits)
+        dk_acc[...] += jax.lax.dot_general(
+            ds_q * ds_d, qq * dq, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(qb == n_q - 1)
+    def _done():
+        dk_ref[0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m_bits", "bq", "bk", "causal",
+                                             "interpret"))
+def hbfp_flash_attention_bwd(q, k, v, o, lse, do, *, m_bits: int = 8,
+                             bq: int = 128, bk: int = 128,
+                             causal: bool = True, interpret: bool = False):
+    """Fused BFP flash-attention backward: returns (dq, dk, dv), each
+    [BH, S, hd]. Two pallas_calls: dq iterates k-blocks per q-block; dk/dv
+    iterate q-blocks per k-block."""
+    BH, S, hd = q.shape
+    bq, bk = min(bq, S), min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = 1.0 / (hd ** 0.5)
+    delta = (do.astype(jnp.float32) * o.astype(jnp.float32)).sum(-1)
+    specs = [
+        pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),   # q
+        pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),   # k
+        pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),   # v
+        pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),   # do
+        pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),          # lse
+        pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),          # delta
+    ]
+    dq = pl.pallas_call(
+        functools.partial(_flash_dq_kernel, m_bits=m_bits, bq=bq, bk=bk,
+                          hd=hd, n_k=S // bk, scale=scale, causal=causal),
+        grid=(BH, S // bq, S // bk),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    # dk/dv grid swaps the roles: (b, k-block, q-block), q innermost
+    specs_kv = [
+        pl.BlockSpec((1, bq, hd), lambda b, j, i: (b, i, 0)),   # q
+        pl.BlockSpec((1, bk, hd), lambda b, j, i: (b, j, 0)),   # k
+        pl.BlockSpec((1, bk, hd), lambda b, j, i: (b, j, 0)),   # v
+        pl.BlockSpec((1, bq, hd), lambda b, j, i: (b, i, 0)),   # do
+        pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),          # lse
+        pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),          # delta
+    ]
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_dkv_kernel, m_bits=m_bits, bq=bq, bk=bk,
+                          hd=hd, n_q=S // bq, scale=scale, causal=causal),
+        grid=(BH, S // bk, S // bq),
+        in_specs=specs_kv,
+        out_specs=[pl.BlockSpec((1, bk, hd), lambda b, j, i: (b, j, 0)),
+                   pl.BlockSpec((1, bk, hd), lambda b, j, i: (b, j, 0))],
+        out_shape=[jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+                   jax.ShapeDtypeStruct((BH, S, hd), q.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, hd), jnp.float32),
+                        pltpu.VMEM((bk, hd), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ----------------------------------------------------------------------------
+# custom VJP: the training entry point
+# ----------------------------------------------------------------------------
+
+class FlashSpec(NamedTuple):
+    """Static flash-attention kernel configuration."""
+    m_bits: int
+    bq: int
+    bk: int
+    causal: bool
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def flash_attention_vjp(spec: FlashSpec, q, k, v):
+    return hbfp_flash_attention(q, k, v, m_bits=spec.m_bits, bq=spec.bq,
+                                bk=spec.bk, causal=spec.causal,
+                                interpret=spec.interpret)
+
+
+def _flash_fwd(spec, q, k, v):
+    o, lse = hbfp_flash_attention(q, k, v, m_bits=spec.m_bits, bq=spec.bq,
+                                  bk=spec.bk, causal=spec.causal,
+                                  with_lse=True, interpret=spec.interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(spec, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = hbfp_flash_attention_bwd(
+        q, k, v, o, lse, do, m_bits=spec.m_bits, bq=spec.bq, bk=spec.bk,
+        causal=spec.causal, interpret=spec.interpret)
+    return dq, dk, dv
+
+
+flash_attention_vjp.defvjp(_flash_fwd, _flash_bwd)

@@ -1,0 +1,151 @@
+"""Training-path HBFP matmul on the Pallas kernels (custom VJP).
+
+`hbfp_matmul_kernel` is the kernel-backend counterpart of
+`core.hbfp_ops.hbfp_matmul`: same semantics (all three training GEMMs in
+BFP, gradients flow straight through the quantizers), but every GEMM is a
+fused quantize-in-VMEM Pallas kernel instead of quantize ops + XLA matmul:
+
+    fwd  : y  = Q_row(x) · Q_tile(w)        hbfp_matmul_pallas
+    dgrad: dx = Q_row(dy) · Q_tile(w)^T     hbfp_dgrad_pallas
+    wgrad: dw = Q_row(x)^T ⊙ Q_row(dy)      hbfp_wgrad_pallas (FP accumulate)
+
+Each GEMM quantizes its operands at its own tiling right before the dot
+(the paper's conversion-fused-into-MatMul rule; FlexBlock's per-GEMM BFP
+modes) — x and dy draw from the same stochastic stream in every GEMM they
+appear in (kernels/common.py STREAM_*), so matching tilings re-quantize to
+identical values. Tile sizes resolve per GEMM through the autotuner table
+at trace time (kernels/autotune.py). Non-divisible shapes pad to the tile
+grid and slice back; zero padding quantizes to zero and contributes
+nothing to any of the three contractions.
+
+See docs/KERNELS.md for the dataflow diagrams and DESIGN.md §10 for the
+backward-pass numerics rationale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import autotune, ops
+from repro.kernels.hbfp_matmul import (hbfp_dgrad_pallas, hbfp_matmul_pallas,
+                                       hbfp_wgrad_pallas)
+
+
+class KernelSpec(NamedTuple):
+    """Static (hashable) kernel configuration for one matmul call site."""
+    mantissa_bits: int
+    stochastic: bool
+    quantize_w: bool
+    fwd: Tuple[int, int, int]     # (bm, bk, bn): M/K-contraction/N tiles
+    dgrad: Tuple[int, int, int]   # (bm, bk, bn): M/K/N-contraction tiles
+    wgrad: Tuple[int, int, int]   # (bm, bk, bn): M-contraction/K/N tiles
+
+
+def _pad2(a, mr, mc):
+    pr, pc = (-a.shape[0]) % mr, (-a.shape[1]) % mc
+    if pr or pc:
+        return jnp.pad(a, ((0, pr), (0, pc)))
+    return a
+
+
+def _zero_cotangent(x):
+    return np.zeros(np.shape(x), jax.dtypes.float0)
+
+
+def _fwd_impl(spec: KernelSpec, x2, w, seed):
+    M, K = x2.shape
+    N = w.shape[1]
+    bm, bk, bn = autotune.clip_tiles(spec.fwd, M, K, N)
+    y = hbfp_matmul_pallas(
+        _pad2(x2, bm, bk), _pad2(w, bk, bn), seed,
+        mantissa_bits=spec.mantissa_bits, stochastic=spec.stochastic,
+        quantize_w=spec.quantize_w, bm=bm, bk=bk, bn=bn,
+        interpret=ops.INTERPRET)
+    return y[:M, :N].astype(x2.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _matmul_vjp(spec: KernelSpec, x2, w, seed):
+    return _fwd_impl(spec, x2, w, seed)
+
+
+def _vjp_fwd(spec, x2, w, seed):
+    return _fwd_impl(spec, x2, w, seed), (x2, w, seed)
+
+
+def _vjp_bwd(spec, res, g):
+    x2, w, seed = res
+    M, K = x2.shape
+    N = w.shape[1]
+    g = g.astype(jnp.float32)
+    # dgrad: dx[M,K] = Q(g)·Q(w)^T, contraction over N
+    bm, bk, bn = autotune.clip_tiles(spec.dgrad, M, K, N)
+    dx = hbfp_dgrad_pallas(
+        _pad2(g, bm, bn), _pad2(w, bk, bn), seed,
+        mantissa_bits=spec.mantissa_bits, stochastic=spec.stochastic,
+        quantize_w=spec.quantize_w, bm=bm, bk=bk, bn=bn,
+        interpret=ops.INTERPRET)[:M, :K]
+    # wgrad: dw[K,N] = Q(x)^T·Q(g), contraction over the token axis M
+    bm, bk, bn = autotune.clip_tiles(spec.wgrad, M, K, N)
+    dw = hbfp_wgrad_pallas(
+        _pad2(x2, bm, bk), _pad2(g, bm, bn), seed,
+        mantissa_bits=spec.mantissa_bits, stochastic=spec.stochastic,
+        bm=bm, bk=bk, bn=bn, interpret=ops.INTERPRET)[:K, :N]
+    return dx.astype(x2.dtype), dw.astype(w.dtype), _zero_cotangent(seed)
+
+
+_matmul_vjp.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def seed_from_key(key) -> jax.Array:
+    """Fold a JAX PRNG key into the kernels' (1,1) int32 seed. The kernel
+    path's xorshift stream is deterministic in this seed but distinct from
+    the sim path's threefry draws (DESIGN.md §10)."""
+    kd = jax.random.key_data(key).astype(jnp.uint32).reshape(-1)
+    return (kd[0] ^ kd[-1]).astype(jnp.int32).reshape(1, 1)
+
+
+def resolve_spec(cfg, M: int, K: int, N: int,
+                 dtype: str = "float32") -> KernelSpec:
+    """Build the static KernelSpec for one call site: rounding/width from
+    the HBFPConfig, per-GEMM tiles from the autotuner table (trace time)."""
+    args = dict(dtype=dtype, mantissa_bits=cfg.mantissa_bits)
+    return KernelSpec(
+        mantissa_bits=cfg.mantissa_bits,
+        stochastic=cfg.rounding == "stochastic",
+        quantize_w=cfg.requantize_weights,
+        fwd=autotune.lookup("matmul_fwd", M, K, N, **args),
+        dgrad=autotune.lookup("matmul_dgrad", M, K, N, **args),
+        wgrad=autotune.lookup("matmul_wgrad", M, K, N, **args))
+
+
+def hbfp_matmul_kernel(x: jax.Array, w: jax.Array, cfg,
+                       key: Optional[jax.Array] = None) -> jax.Array:
+    """BFP matmul y = Q(x)·Q(w) with fused-kernel BFP backward passes.
+
+    Drop-in for `hbfp_ops.hbfp_matmul(x, w, cfg, key)` on the Pallas
+    training path (models dispatch here via `Ctx.backend == "pallas"`).
+    x: [..., M, K] (leading dims flattened into M); w: [K, N] — batched
+    weights stay on the sim path (`models.layers.ctx_matmul` falls back).
+    cfg None or ≥ f32-mantissa width ⇒ plain FP matmul, like the sim path.
+    """
+    if cfg is None or cfg.mantissa_bits >= 24:
+        return jnp.matmul(x, w)
+    if w.ndim != 2:
+        raise ValueError(f"kernel path needs 2-D w, got {w.shape}")
+    K = x.shape[-1]
+    N = w.shape[1]
+    x2 = x.reshape(-1, K)
+    if cfg.rounding == "stochastic":
+        if key is None:
+            raise ValueError("stochastic rounding requires a key")
+        seed = seed_from_key(key)
+    else:
+        seed = jnp.zeros((1, 1), jnp.int32)
+    spec = resolve_spec(cfg, x2.shape[0], K, N, dtype=str(x.dtype))
+    y = _matmul_vjp(spec, x2, w, seed)
+    return y.reshape(*x.shape[:-1], N)

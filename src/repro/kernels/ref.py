@@ -10,7 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import quantize_block
+from repro.kernels.common import (STREAM_G, STREAM_W, STREAM_X,
+                                  quantize_block)
 
 
 def bfp_quantize_ref(x, seed, *, mantissa_bits=8, tile_r=128, tile_c=128,
@@ -54,9 +55,12 @@ def bfp_quantize_ref(x, seed, *, mantissa_bits=8, tile_r=128, tile_c=128,
 
 
 def hbfp_matmul_ref(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
-                    bm=128, bk=128, bn=128, out_dtype=jnp.float32):
+                    quantize_w=True, bm=128, bk=128, bn=128,
+                    out_dtype=jnp.float32):
     """Oracle for hbfp_matmul_pallas: per-(row, K-block) activation exponents,
-    per-(bk, bn)-tile weight exponents, f32 accumulation across K blocks."""
+    per-(bk, bn)-tile weight exponents, f32 accumulation across K blocks.
+    quantize_w=False mirrors the kernel's pre-narrowed-weight path (raw w,
+    f32 contraction)."""
     M, K = x.shape
     _, N = w.shape
     bm_, bk_, bn_ = min(bm, M), min(bk, K), min(bn, N)
@@ -73,18 +77,24 @@ def hbfp_matmul_ref(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
         if stochastic:
             r = jax.lax.broadcasted_iota(jnp.int32, (M, bk_), 0)
             c = jax.lax.broadcasted_iota(jnp.int32, (M, bk_), 1)
-            idx_x = r * K + (kk * bk_ + c)
+            idx_x = r * K + (kk * bk_ + c) + jnp.int32(STREAM_X)
         qx, dx = quantize_block(xs, mantissa_bits, ax, stochastic=stochastic,
                                 seed=seed_v, idx=idx_x)
         for jj in range(N // bn_):
             ws = wf[kk * bk_:(kk + 1) * bk_, jj * bn_:(jj + 1) * bn_]
+            if not quantize_w:
+                part = jax.lax.dot_general(
+                    qx, ws, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                acc = acc.at[:, jj * bn_:(jj + 1) * bn_].add(part * dx)
+                continue
             aw = jnp.abs(ws).max()
             idx_w = None
             if stochastic:
                 rw = jax.lax.broadcasted_iota(jnp.int32, (bk_, bn_), 0)
                 cw = jax.lax.broadcasted_iota(jnp.int32, (bk_, bn_), 1)
                 idx_w = ((kk * bk_ + rw) * N + (jj * bn_ + cw)
-                         + jnp.int32(0x40000000))
+                         + jnp.int32(STREAM_W))
             qw, dw = quantize_block(ws, mantissa_bits, aw,
                                     stochastic=stochastic, seed=seed_v,
                                     idx=idx_w)
@@ -101,13 +111,123 @@ def hbfp_matmul_ref(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
     return acc.astype(out_dtype)
 
 
-def hbfp_flash_attn_ref(q, k, v, *, m_bits=8, bq=128, bk=128, causal=True):
+def hbfp_dgrad_ref(g, w, seed=None, *, mantissa_bits=8, stochastic=False,
+                   quantize_w=True, bm=128, bk=128, bn=128,
+                   out_dtype=jnp.float32):
+    """Oracle for hbfp_dgrad_pallas: dx[M,K] = Q(g)·Q(w)^T, gradient rows
+    quantized per (row, N-block), weight tiles per (bk, bn) block of w,
+    f32 accumulation across N blocks in kernel order."""
+    M, N = g.shape
+    K, _ = w.shape
+    bm_, bk_, bn_ = min(bm, M), min(bk, K), min(bn, N)
+    seed_v = jnp.zeros((), jnp.int32) if seed is None \
+        else jnp.asarray(seed).reshape(-1)[0]
+    gf = g.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+
+    acc = jnp.zeros((M, K), jnp.float32)
+    for nn in range(N // bn_):
+        gs = gf[:, nn * bn_:(nn + 1) * bn_]                      # [M, bn]
+        ag = jnp.abs(gs).max(axis=1, keepdims=True)
+        idx_g = None
+        if stochastic:
+            r = jax.lax.broadcasted_iota(jnp.int32, (M, bn_), 0)
+            c = jax.lax.broadcasted_iota(jnp.int32, (M, bn_), 1)
+            idx_g = r * N + (nn * bn_ + c) + jnp.int32(STREAM_G)
+        qg, dg = quantize_block(gs, mantissa_bits, ag, stochastic=stochastic,
+                                seed=seed_v, idx=idx_g)
+        for jj in range(K // bk_):
+            ws = wf[jj * bk_:(jj + 1) * bk_, nn * bn_:(nn + 1) * bn_]
+            if not quantize_w:
+                part = jax.lax.dot_general(
+                    qg, ws, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                acc = acc.at[:, jj * bk_:(jj + 1) * bk_].add(part * dg)
+                continue
+            aw = jnp.abs(ws).max()
+            idx_w = None
+            if stochastic:
+                rw = jax.lax.broadcasted_iota(jnp.int32, (bk_, bn_), 0)
+                cw = jax.lax.broadcasted_iota(jnp.int32, (bk_, bn_), 1)
+                idx_w = ((jj * bk_ + rw) * N + (nn * bn_ + cw)
+                         + jnp.int32(STREAM_W))
+            qw, dw = quantize_block(ws, mantissa_bits, aw,
+                                    stochastic=stochastic, seed=seed_v,
+                                    idx=idx_w)
+            if mantissa_bits <= 8:
+                part = jax.lax.dot_general(
+                    qg.astype(jnp.int8), qw.astype(jnp.int8),
+                    (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.int32).astype(jnp.float32)
+            else:
+                part = jax.lax.dot_general(
+                    qg, qw, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            acc = acc.at[:, jj * bk_:(jj + 1) * bk_].add(part * (dg * dw))
+    return acc.astype(out_dtype)
+
+
+def hbfp_wgrad_ref(x, g, seed=None, *, mantissa_bits=8, stochastic=False,
+                   bm=128, bk=128, bn=128, out_dtype=jnp.float32):
+    """Oracle for hbfp_wgrad_pallas: dw[K,N] = Q(x)^T·Q(g). Both operands
+    take per-(row, block) activation exponents (x over K-blocks on the
+    forward's stream, g over N-blocks on the dgrad stream); per-token scales
+    ride the contraction, so dequantized f32 outer products accumulate in
+    kernel order over M blocks."""
+    M, K = x.shape
+    _, N = g.shape
+    bm_, bk_, bn_ = min(bm, M), min(bk, K), min(bn, N)
+    seed_v = jnp.zeros((), jnp.int32) if seed is None \
+        else jnp.asarray(seed).reshape(-1)[0]
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+
+    acc = jnp.zeros((K, N), jnp.float32)
+    for mm in range(M // bm_):
+        xs = xf[mm * bm_:(mm + 1) * bm_]                         # [bm, K]
+        gs = gf[mm * bm_:(mm + 1) * bm_]                         # [bm, N]
+        for ii in range(K // bk_):
+            xb = xs[:, ii * bk_:(ii + 1) * bk_]
+            ax = jnp.abs(xb).max(axis=1, keepdims=True)
+            idx_x = None
+            if stochastic:
+                r = jax.lax.broadcasted_iota(jnp.int32, (bm_, bk_), 0)
+                c = jax.lax.broadcasted_iota(jnp.int32, (bm_, bk_), 1)
+                idx_x = ((mm * bm_ + r) * K + (ii * bk_ + c)
+                         + jnp.int32(STREAM_X))
+            qx, dx = quantize_block(xb, mantissa_bits, ax,
+                                    stochastic=stochastic, seed=seed_v,
+                                    idx=idx_x)
+            for jj in range(N // bn_):
+                gb = gs[:, jj * bn_:(jj + 1) * bn_]
+                ag = jnp.abs(gb).max(axis=1, keepdims=True)
+                idx_g = None
+                if stochastic:
+                    rg = jax.lax.broadcasted_iota(jnp.int32, (bm_, bn_), 0)
+                    cg = jax.lax.broadcasted_iota(jnp.int32, (bm_, bn_), 1)
+                    idx_g = ((mm * bm_ + rg) * N + (jj * bn_ + cg)
+                             + jnp.int32(STREAM_G))
+                qg, dg = quantize_block(gb, mantissa_bits, ag,
+                                        stochastic=stochastic, seed=seed_v,
+                                        idx=idx_g)
+                part = jax.lax.dot_general(
+                    qx * dx, qg * dg, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                acc = acc.at[ii * bk_:(ii + 1) * bk_,
+                             jj * bn_:(jj + 1) * bn_].add(part)
+    return acc.astype(out_dtype)
+
+
+def hbfp_flash_attn_ref(q, k, v, *, m_bits=8, bq=128, bk=128, causal=True,
+                        with_lse=False):
     """Oracle for hbfp_flash_attention: same per-block BFP quantization,
-    same online-softmax order of operations (bit-exact in f32)."""
+    same online-softmax order of operations (bit-exact in f32).
+    with_lse=True additionally returns the per-row logsumexp [BH, S]."""
     BH, S, hd = q.shape
     bq_, bk_ = min(bq, S), min(bk, S)
     scale = 1.0 / (hd ** 0.5)
     out = jnp.zeros_like(q, jnp.float32)
+    lse_out = jnp.zeros((BH, S), jnp.float32)
     for b in range(BH):
         for i in range(S // bq_):
             qs = q[b, i * bq_:(i + 1) * bq_].astype(jnp.float32) * scale
@@ -159,4 +279,95 @@ def hbfp_flash_attn_ref(q, k, v, *, m_bits=8, bq=128, bk=128, causal=True):
                 m = m_new
             out = out.at[b, i * bq_:(i + 1) * bq_].set(
                 acc / jnp.maximum(l, 1e-30))
+            lse_out = lse_out.at[b, i * bq_:(i + 1) * bq_].set(
+                (m + jnp.log(jnp.maximum(l, 1e-30)))[:, 0])
+    if with_lse:
+        return out.astype(q.dtype), lse_out
     return out.astype(q.dtype)
+
+
+def hbfp_flash_attn_vjp_ref(q, k, v, do, *, m_bits=8, bq=128, bk=128,
+                            causal=True):
+    """Oracle for hbfp_flash_attention_bwd: same BFP quantization of every
+    backward GEMM operand, same block order (dq accumulates over k-blocks
+    per q-block; dk/dv over q-blocks per k-block). Returns (dq, dk, dv)."""
+    BH, S, hd = q.shape
+    bq_, bk_ = min(bq, S), min(bk, S)
+    scale = 1.0 / (hd ** 0.5)
+    out, lse = hbfp_flash_attn_ref(q, k, v, m_bits=m_bits, bq=bq_, bk=bk_,
+                                   causal=causal, with_lse=True)
+    dof = do.astype(jnp.float32)
+    delta = (dof * out.astype(jnp.float32)).sum(-1)      # [BH, S]
+
+    def rows(x):
+        return quantize_block(x, m_bits, jnp.abs(x).max(1, keepdims=True),
+                              stochastic=False)
+
+    def recompute(b, i, j):
+        qs = q[b, i * bq_:(i + 1) * bq_].astype(jnp.float32) * scale
+        ks = k[b, j * bk_:(j + 1) * bk_].astype(jnp.float32)
+        qq, dqv = rows(qs)
+        kq, dkv = rows(ks)
+        if m_bits <= 8:
+            s = jax.lax.dot_general(
+                qq.astype(jnp.int8), kq.T.astype(jnp.int8),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32
+            ).astype(jnp.float32) * (dqv * dkv.T)
+        else:
+            s = (qq @ kq.T) * (dqv * dkv.T)
+        if causal:
+            qpos = i * bq_ + jnp.arange(bq_)[:, None]
+            kpos = j * bk_ + jnp.arange(bk_)[None, :]
+            s = jnp.where(kpos <= qpos, s, -1e30)
+        p = jnp.exp(s - lse[b, i * bq_:(i + 1) * bq_][:, None])
+        return p, (qq, dqv), (kq, dkv)
+
+    def dsoft(b, i, j, p, do_q, do_d):
+        vs = v[b, j * bk_:(j + 1) * bk_].astype(jnp.float32)
+        vq, dv_ = rows(vs)
+        if m_bits <= 8:
+            dp = jax.lax.dot_general(
+                do_q.astype(jnp.int8), vq.T.astype(jnp.int8),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32
+            ).astype(jnp.float32) * (do_d * dv_.T)
+        else:
+            dp = (do_q @ vq.T) * (do_d * dv_.T)
+        return p * (dp - delta[b, i * bq_:(i + 1) * bq_][:, None])
+
+    dq = jnp.zeros((BH, S, hd), jnp.float32)
+    dk = jnp.zeros((BH, S, hd), jnp.float32)
+    dv = jnp.zeros((BH, S, hd), jnp.float32)
+    for b in range(BH):
+        for i in range(S // bq_):
+            acc = jnp.zeros((bq_, hd), jnp.float32)
+            do_q, do_d = rows(dof[b, i * bq_:(i + 1) * bq_])
+            for j in range(S // bk_):
+                if causal and j * bk_ > i * bq_ + bq_ - 1:
+                    continue
+                p, _, (kq, dkv) = recompute(b, i, j)
+                ds = dsoft(b, i, j, p, do_q, do_d)
+                ds_q, ds_d = rows(ds)
+                acc = acc + ((ds_q * ds_d) @ (kq * dkv)) * scale
+            dq = dq.at[b, i * bq_:(i + 1) * bq_].set(acc)
+        for j in range(S // bk_):
+            acc_k = jnp.zeros((bk_, hd), jnp.float32)
+            acc_v = jnp.zeros((bk_, hd), jnp.float32)
+            for i in range(S // bq_):
+                if causal and j * bk_ > i * bq_ + bq_ - 1:
+                    continue
+                p, (qq, dqv), _ = recompute(b, i, j)
+                do_q, do_d = rows(dof[b, i * bq_:(i + 1) * bq_])
+                p_q, p_d = rows(p)
+                acc_v = acc_v + jax.lax.dot_general(
+                    p_q * p_d, do_q * do_d, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                ds = dsoft(b, i, j, p, do_q, do_d)
+                ds_q, ds_d = rows(ds)
+                acc_k = acc_k + jax.lax.dot_general(
+                    ds_q * ds_d, qq * dqv, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            dk = dk.at[b, j * bk_:(j + 1) * bk_].set(acc_k)
+            dv = dv.at[b, j * bk_:(j + 1) * bk_].set(acc_v)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
 the production shardings and extract memory / cost / collective statistics.
 
@@ -16,6 +13,12 @@ Usage:
   python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
   python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
 """
+# host-device fanout must be set before jax imports; the real
+# imports below this block are therefore intentionally late
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import dataclasses
 import json

@@ -1,3 +1,4 @@
+"""Transformer / MoE / SSM / xLSTM model stacks with HBFP dot products."""
 from repro.models.layers import Ctx
 from repro.models.transformer import (decode_step, forward, init_params,
                                       loss_fn, make_cache, prefill)

@@ -5,6 +5,12 @@ HBFP: the QK^T and PV contractions are dot products, so they run in BFP when
 cfg.quantize_attention (the paper predates attention blocks; DESIGN.md §2
 marks this as the natural extension of "all dot products in BFP").
 Softmax/masking/rotary stay FP.
+
+Backends (DESIGN.md §10): under Ctx.backend == "pallas", full-causal
+training attention (static gate: flash_ok pattern + nearest rounding +
+block-divisible S) runs through the fused flash kernel's custom VJP
+(`flash_mha`); everything else — windows, softcap, decode caches,
+stochastic rounding — stays on the sim path below.
 """
 from __future__ import annotations
 
@@ -14,10 +20,19 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.hbfp_ops import hbfp_matmul
-from repro.models.layers import apply_mrope, apply_rope, softcap
+from repro.models.layers import apply_mrope, apply_rope, ctx_matmul, softcap
 
 NEG_INF = -1e30
+
+_FLASH_BLOCKS = (128, 64, 32, 16, 8)
+
+
+def _flash_block(S: int):
+    """Largest supported flash block dividing S (None ⇒ no flash path)."""
+    for b in _FLASH_BLOCKS:
+        if S % b == 0:
+            return min(b, S)
+    return None
 
 
 class KVCache(NamedTuple):
@@ -62,7 +77,7 @@ def _attend_block(qb, k, v, qpos, kpos, ctx, cap, window):
     [B,Hkv,S,hd]; qpos: [C] or [B,C]; kpos: [B,S]. Returns [B,Hkv,G,C,hd]."""
     acfg = _acfg(ctx)
     kt = jnp.swapaxes(k, -1, -2)[:, :, None]            # [B,Hkv,1,hd,S]
-    scores = hbfp_matmul(qb, kt, acfg, ctx.key_for("qk"), w_kind="act")
+    scores = ctx_matmul(qb, kt, ctx, "qk", cfg=acfg, w_kind="act")
     scores = scores.astype(jnp.float32)
     scores = softcap(scores, cap)
     if qpos.ndim == 1:
@@ -76,9 +91,32 @@ def _attend_block(qb, k, v, qpos, kpos, ctx, cap, window):
         mask &= kp > qp - window
     scores = jnp.where(mask[:, None, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(qb.dtype)
-    out = hbfp_matmul(probs, v[:, :, None], acfg, ctx.key_for("pv"),
-                      w_kind="act")
+    out = ctx_matmul(probs, v[:, :, None], ctx, "pv", cfg=acfg,
+                     w_kind="act")
     return out
+
+
+def flash_mha(q, k, v, ctx):
+    """Full-causal training attention on the fused flash kernel
+    (custom VJP: forward AND the four backward GEMMs are BFP Pallas
+    kernels). q: [B,H,S,hd], k/v: [B,Hkv,S,hd] (GQA groups broadcast; the
+    repeat's transpose sums group gradients). Assumes the standard
+    contiguous causal layout — position-index masking, no window/softcap
+    (attention_layer gates on those statically)."""
+    from repro.kernels import ops as kops
+    from repro.kernels.hbfp_flash_attn import FlashSpec, flash_attention_vjp
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=1)
+        v = jnp.repeat(v, H // Hkv, axis=1)
+    blk = _flash_block(S)
+    spec = FlashSpec(m_bits=ctx.cfg.mantissa_bits, bq=blk, bk=blk,
+                     causal=True, interpret=kops.INTERPRET)
+    out = flash_attention_vjp(spec, q.reshape(B * H, S, hd),
+                              k.reshape(B * H, S, hd),
+                              v.reshape(B * H, S, hd))
+    return out.reshape(B, H, S, hd)
 
 
 def mha(q, k, v, qpos, kpos, ctx, *, cap=None, window=None,
@@ -125,17 +163,20 @@ def attention_layer(x, p, ctx, *, n_heads, n_kv_heads, head_dim,
                     window=None, attn_cap=None, q_chunk=512,
                     cache: Optional[KVCache] = None,
                     return_cache: bool = False,
-                    bfp_cache: bool = False):
+                    bfp_cache: bool = False,
+                    flash_ok: bool = False):
     """x: [B,S,D]. positions: [B,S] (or [3,B,S] for mrope).
 
     Training/prefill: cache is None; attends causally within x.
     Decode: cache given; S == 1; appends to cache (ring-buffer if the cache
     is smaller than the context) and attends over it.
+    flash_ok (static, from the arch): the pattern is full-causal with no
+    softcap, so the "pallas" backend may take the fused flash kernel.
     """
     B, S, D = x.shape
-    q = hbfp_matmul(x, p["attn_wq"], ctx.cfg, ctx.key_for("wq"))
-    k = hbfp_matmul(x, p["attn_wk"], ctx.cfg, ctx.key_for("wk"))
-    v = hbfp_matmul(x, p["attn_wv"], ctx.cfg, ctx.key_for("wv"))
+    q = ctx_matmul(x, p["attn_wq"], ctx, "wq")
+    k = ctx_matmul(x, p["attn_wk"], ctx, "wk")
+    v = ctx_matmul(x, p["attn_wv"], ctx, "wv")
     q = q.reshape(B, S, n_heads, head_dim).transpose(0, 2, 1, 3)
     k = k.reshape(B, S, n_kv_heads, head_dim).transpose(0, 2, 1, 3)
     v = v.reshape(B, S, n_kv_heads, head_dim).transpose(0, 2, 1, 3)
@@ -148,9 +189,19 @@ def attention_layer(x, p, ctx, *, n_heads, n_kv_heads, head_dim,
     tok_pos = positions[0] if mrope else positions       # [B,S] absolute
 
     if cache is None:
+        # fused flash path (DESIGN.md §10): gate on static facts only — the
+        # arch's attention pattern (flash_ok), the backend, nearest rounding
+        # (the flash kernels are deterministic), and block divisibility
+        use_flash = (flash_ok and ctx.backend == "pallas"
+                     and ctx.cfg is not None and ctx.cfg.quantize_attention
+                     and ctx.cfg.rounding == "nearest"
+                     and _flash_block(S) is not None)
         qpos = tok_pos if tok_pos.ndim == 2 else tok_pos
-        out = mha(q, k, v, qpos, tok_pos, ctx, cap=attn_cap, window=window,
-                  q_chunk=q_chunk)
+        if use_flash:
+            out = flash_mha(q, k, v, ctx)
+        else:
+            out = mha(q, k, v, qpos, tok_pos, ctx, cap=attn_cap,
+                      window=window, q_chunk=q_chunk)
         new_cache = None
         if return_cache:
             if bfp_cache:
@@ -186,7 +237,7 @@ def attention_layer(x, p, ctx, *, n_heads, n_kv_heads, head_dim,
                   q_chunk=None)
 
     out = out.transpose(0, 2, 1, 3).reshape(B, S, n_heads * head_dim)
-    out = hbfp_matmul(out, p["attn_wo"], ctx.cfg, ctx.key_for("wo"))
+    out = ctx_matmul(out, p["attn_wo"], ctx, "wo")
     return out, new_cache
 
 

@@ -75,23 +75,50 @@ def apply_mrope(x, positions3, theta: float = 1e6,
 
 
 # ----------------------------------------------------------------------------
+# Dot-product dispatch (DESIGN.md §10)
+# ----------------------------------------------------------------------------
+
+_UNSET = object()
+
+
+def ctx_matmul(x, w, ctx, site: str, cfg=_UNSET, w_kind: str = "weight"):
+    """Route one model dot product through the Ctx's backend.
+
+    backend "sim" (default) is exactly the pre-existing path: one call to
+    `core.hbfp_ops.hbfp_matmul` with the same arguments (bit-identical by
+    construction; regression-tested). backend "pallas" sends 2-D
+    weight-kind matmuls through the fused-kernel custom-VJP path
+    (`kernels/linear.py` — all three training GEMMs as Pallas kernels);
+    batched weights and activation right-hand sides (attention scores, MoE
+    per-expert weights) fall back to the sim path per call site.
+    """
+    cfg = ctx.cfg if cfg is _UNSET else cfg
+    key = ctx.key_for(site)
+    if (ctx.backend == "pallas" and cfg is not None and w.ndim == 2
+            and w_kind == "weight"):
+        from repro.kernels.linear import hbfp_matmul_kernel
+        return hbfp_matmul_kernel(x, w, cfg, key)
+    return hbfp_matmul(x, w, cfg, key, w_kind=w_kind)
+
+
+# ----------------------------------------------------------------------------
 # FFN
 # ----------------------------------------------------------------------------
 
 def swiglu_ffn(x, p, ctx):
     """SwiGLU: (silu(x@wg) * (x@wi)) @ wo — three HBFP matmuls, FP gating."""
-    g = hbfp_matmul(x, p["ffn_wg"], ctx.cfg, ctx.key_for("ffn_g"))
-    u = hbfp_matmul(x, p["ffn_wi"], ctx.cfg, ctx.key_for("ffn_i"))
+    g = ctx_matmul(x, p["ffn_wg"], ctx, "ffn_g")
+    u = ctx_matmul(x, p["ffn_wi"], ctx, "ffn_i")
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    return hbfp_matmul(h, p["ffn_wo"], ctx.cfg, ctx.key_for("ffn_o"))
+    return ctx_matmul(h, p["ffn_wo"], ctx, "ffn_o")
 
 
 def gelu_ffn(x, p, ctx):
     """GeGLU variant (gemma2 uses gelu gating)."""
-    g = hbfp_matmul(x, p["ffn_wg"], ctx.cfg, ctx.key_for("ffn_g"))
-    u = hbfp_matmul(x, p["ffn_wi"], ctx.cfg, ctx.key_for("ffn_i"))
+    g = ctx_matmul(x, p["ffn_wg"], ctx, "ffn_g")
+    u = ctx_matmul(x, p["ffn_wi"], ctx, "ffn_i")
     h = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype) * u
-    return hbfp_matmul(h, p["ffn_wo"], ctx.cfg, ctx.key_for("ffn_o"))
+    return ctx_matmul(h, p["ffn_wo"], ctx, "ffn_o")
 
 
 # ----------------------------------------------------------------------------
@@ -101,10 +128,11 @@ def gelu_ffn(x, p, ctx):
 
 class Ctx:
     __slots__ = ("cfg", "key", "compute_dtype", "act_constraint", "shard_fn",
-                 "act_tap")
+                 "act_tap", "backend")
 
     def __init__(self, cfg, key=None, compute_dtype=jnp.float32,
-                 act_constraint=None, shard_fn=None, act_tap=False):
+                 act_constraint=None, shard_fn=None, act_tap=False,
+                 backend="sim"):
         self.cfg = cfg
         self.key = key
         self.compute_dtype = compute_dtype
@@ -120,6 +148,12 @@ class Ctx:
         # activation fidelity stats for the residual stream as a metrics
         # aux output ("act_stats"); pure measurement, never changes values
         self.act_tap = act_tap
+        # dot-product execution backend (DESIGN.md §10): "sim" routes every
+        # matmul through core.hbfp_ops (quantize ops + XLA matmul); "pallas"
+        # routes 2-D weight matmuls through the fused-kernel custom-VJP path
+        # and full-causal attention through the flash kernel. Set from
+        # ArchConfig.kernel_backend by the train step.
+        self.backend = backend
 
     def shard(self, x, logical_axes):
         if self.shard_fn is None:
@@ -137,7 +171,7 @@ class Ctx:
         """Child context for layer i (i may be a traced int32)."""
         k = None if self.key is None else jax.random.fold_in(self.key, i)
         return Ctx(self.cfg, k, self.compute_dtype, self.act_constraint,
-                   self.shard_fn, self.act_tap)
+                   self.shard_fn, self.act_tap, self.backend)
 
 
 def init_linear(key, d_in, d_out, scale=None, dtype=jnp.float32):

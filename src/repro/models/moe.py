@@ -17,8 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.hbfp_ops import hbfp_matmul
-from repro.models.layers import swiglu_ffn
+from repro.models.layers import ctx_matmul, swiglu_ffn
 
 
 def route(x, router_w, n_experts: int, top_k: int):
@@ -88,10 +87,10 @@ def moe_ffn(x, p, ctx, *, n_experts: int, top_k: int,
     expert_in = expert_in.reshape(n_experts, -1, D)
 
     # per-expert SwiGLU in HBFP: [E, G·Cap, D] @ [E, D, F]
-    g = hbfp_matmul(expert_in, p["moe_wg"], ctx.cfg, ctx.key_for("moe_g"))
-    u = hbfp_matmul(expert_in, p["moe_wi"], ctx.cfg, ctx.key_for("moe_i"))
+    g = ctx_matmul(expert_in, p["moe_wg"], ctx, "moe_g")
+    u = ctx_matmul(expert_in, p["moe_wi"], ctx, "moe_i")
     h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-    eo = hbfp_matmul(h, p["moe_wo"], ctx.cfg, ctx.key_for("moe_o"))
+    eo = ctx_matmul(h, p["moe_wo"], ctx, "moe_o")
     eo = eo.reshape(n_experts, G, capacity, D)
     # route expert outputs HOME before combining: an all-to-all on the
     # [E,G,Cap,D] payload (E-sharded -> G-sharded). Without this, the

@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.hbfp_ops import hbfp_matmul
+from repro.models.layers import ctx_matmul
 
 
 def _chunk_scan(xh, dt, logdecay, Bm, Cm, h0, chunk: int,
@@ -95,7 +95,7 @@ def ssm_branch(u, p, ctx, *, n_heads: int, d_state: int, chunk: int = 128,
     di = p["ssm_out_w"].shape[0]
     P = di // n_heads
     N = d_state
-    zxbcdt = hbfp_matmul(u, p["ssm_in_w"], ctx.cfg, ctx.key_for("ssm_in"))
+    zxbcdt = ctx_matmul(u, p["ssm_in_w"], ctx, "ssm_in")
     z, xr, Bm, Cm, dt_raw = jnp.split(
         zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
@@ -124,8 +124,7 @@ def ssm_branch(u, p, ctx, *, n_heads: int, d_state: int, chunk: int = 128,
     # gated RMS-norm output (mamba-2): norm(y) * silu(z)
     yf = y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-6)
     yf = yf * p["ssm_norm_scale"] * jax.nn.silu(z.astype(jnp.float32))
-    out = hbfp_matmul(yf.astype(u.dtype), p["ssm_out_w"], ctx.cfg,
-                      ctx.key_for("ssm_out"))
+    out = ctx_matmul(yf.astype(u.dtype), p["ssm_out_w"], ctx, "ssm_out")
     return out, (h_end,)
 
 

@@ -23,14 +23,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.hbfp_ops import hbfp_matmul
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.attention import KVCache, attention_layer, init_attention
-from repro.models.layers import (Ctx, gelu_ffn, rms_norm, softcap,
-                                 swiglu_ffn)
+from repro.models.layers import (Ctx, ctx_matmul, gelu_ffn, rms_norm,
+                                 softcap, swiglu_ffn)
 
 BIG_WINDOW = 1 << 30
 
@@ -112,7 +111,7 @@ def _layer_windows(arch: ArchConfig, n_layers: int):
 
 
 def _attn_ffn_block(x, lp, ctx, arch: ArchConfig, positions, window,
-                    cache, want_cache: bool):
+                    cache, want_cache: bool, std_pos: bool = False):
     """Standard pre-norm block; gemma2 adds post-norms; hymba adds the
     parallel mamba branch. Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
@@ -124,7 +123,13 @@ def _attn_ffn_block(x, lp, ctx, arch: ArchConfig, positions, window,
         mrope=arch.mrope, window=window, attn_cap=arch.attn_softcap,
         q_chunk=arch.q_chunk,
         cache=None if cache is None else cache["kv"],
-        return_cache=want_cache, bfp_cache=arch.bfp_kv_cache)
+        return_cache=want_cache, bfp_cache=arch.bfp_kv_cache,
+        # flash masks by block index, so it additionally requires the
+        # standard synthesized arange positions (std_pos) — explicit
+        # batch positions (packed sequences, offsets) stay on mha, which
+        # masks by the actual position values
+        flash_ok=(arch.attn_pattern == "global"
+                  and arch.attn_softcap is None and std_pos))
     new_cache = {} if (want_cache or cache is not None) else None
     if new_cache is not None:
         new_cache["kv"] = new_kv
@@ -219,7 +224,8 @@ def _embed_in(params, batch, arch: ArchConfig, ctx):
 
 
 def _run_stack(params, x, positions, arch: ArchConfig, ctx,
-               cache=None, want_cache: bool = False):
+               cache=None, want_cache: bool = False,
+               std_pos: bool = False):
     L = arch.n_layers
     windows = _layer_windows(arch, L)
     layer_ids = jnp.arange(L)
@@ -238,7 +244,8 @@ def _run_stack(params, x, positions, arch: ArchConfig, ctx,
                                              want_cache)
         else:
             y, new_cache, aux = _attn_ffn_block(x, lp, lctx, arch, positions,
-                                                win, cache_l, want_cache)
+                                                win, cache_l, want_cache,
+                                                std_pos)
         return y, (new_cache, aux)
 
     body_fn = jax.checkpoint(body) if arch.remat else body
@@ -267,11 +274,10 @@ def _head_logits(params, x, arch: ArchConfig, ctx):
     hcfg = ctx.cfg if (ctx.cfg and ctx.cfg.quantize_lm_head) else None
     if arch.n_codebooks > 1:
         logits = jnp.stack(
-            [hbfp_matmul(x, params["head_w"][k], hcfg,
-                         ctx.key_for(f"head{k}"))
+            [ctx_matmul(x, params["head_w"][k], ctx, f"head{k}", cfg=hcfg)
              for k in range(arch.n_codebooks)], axis=-2)
     else:
-        logits = hbfp_matmul(x, params["head_w"], hcfg, ctx.key_for("head"))
+        logits = ctx_matmul(x, params["head_w"], ctx, "head", cfg=hcfg)
     logits = logits / arch.logit_divisor
     return softcap(logits.astype(jnp.float32), arch.final_softcap)
 
@@ -288,7 +294,8 @@ def _logits(params, x, arch: ArchConfig, ctx):
 
 def forward(params, batch, arch: ArchConfig, ctx: Ctx):
     x, positions = _embed_in(params, batch, arch, ctx)
-    x, _, aux = _run_stack(params, x, positions, arch, ctx)
+    x, _, aux = _run_stack(params, x, positions, arch, ctx,
+                           std_pos="positions" not in batch)
     return _logits(params, x, arch, ctx), aux
 
 
@@ -315,7 +322,8 @@ def loss_fn(params, batch, arch: ArchConfig, ctx: Ctx,
                 act_tile_shape(t.ndim, ctx.cfg.act_block))[1]
 
         act_stats = {"embed_out": tap(x)}
-    x, _, aux = _run_stack(params, x, positions, arch, ctx)
+    x, _, aux = _run_stack(params, x, positions, arch, ctx,
+                           std_pos="positions" not in batch)
     if act_stats is not None:
         act_stats["final_hidden"] = tap(x)
     x = rms_norm(x, params["final_norm_scale"], arch.norm_eps,
@@ -388,7 +396,8 @@ def prefill(params, batch, arch: ArchConfig, ctx: Ctx):
     """Forward over the prompt; returns (last-token logits, cache)."""
     x, positions = _embed_in(params, batch, arch, ctx)
     x, cache, _ = _run_stack(params, x, positions, arch, ctx,
-                             want_cache=True)
+                             want_cache=True,
+                             std_pos="positions" not in batch)
     logits = _logits(params, x[:, -1:], arch, ctx)
     return logits, cache
 

@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.hbfp_ops import hbfp_matmul
+from repro.models.layers import ctx_matmul
 from repro.models.layers import rms_norm
 
 LOG_EPS = -30.0
@@ -117,13 +117,12 @@ def mlstm_block(x, p, ctx, *, n_heads: int, chunk: int = 128, state=None,
     """Pre-norm mLSTM block with 2× up-projection and gated output."""
     B, S, D = x.shape
     xn = rms_norm(x, p["norm_scale"])
-    up = hbfp_matmul(xn, p["mlstm_up_w"], ctx.cfg, ctx.key_for("up"))
+    up = ctx_matmul(xn, p["mlstm_up_w"], ctx, "up")
     inner, gate = jnp.split(up, 2, axis=-1)                    # [B,S,D] each
     dk = D // n_heads
-    proj = hbfp_matmul(inner, p["mlstm_qkv_w"], ctx.cfg, ctx.key_for("qkv"))
+    proj = ctx_matmul(inner, p["mlstm_qkv_w"], ctx, "qkv")
     q, k, v = jnp.split(proj, 3, axis=-1)
-    gpre = hbfp_matmul(inner, p["mlstm_gates_w"], ctx.cfg,
-                       ctx.key_for("gates")) + p["mlstm_gates_bias"]
+    gpre = ctx_matmul(inner, p["mlstm_gates_w"], ctx, "gates") + p["mlstm_gates_bias"]
     shp = (B, S, n_heads, dk)
     q = q.reshape(shp).astype(jnp.float32)
     k = (k.reshape(shp) * dk ** -0.5).astype(jnp.float32)
@@ -139,7 +138,7 @@ def mlstm_block(x, p, ctx, *, n_heads: int, chunk: int = 128, state=None,
         h, st = mlstm_step(q, k, v, li, lf, state)
     h = h.reshape(B, S, D).astype(x.dtype)
     h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
-    out = hbfp_matmul(h, p["mlstm_down_w"], ctx.cfg, ctx.key_for("down"))
+    out = ctx_matmul(h, p["mlstm_down_w"], ctx, "down")
     return x + out, st
 
 
@@ -176,15 +175,13 @@ def slstm_seq(gx, r_w, h0, c0, n0, m0, n_heads: int):
 def slstm_block(x, p, ctx, *, n_heads: int, state=None):
     B, S, D = x.shape
     xn = rms_norm(x, p["norm_scale"])
-    gx = hbfp_matmul(xn, p["slstm_in_w"], ctx.cfg,
-                     ctx.key_for("sin")).astype(jnp.float32)   # [B,S,4D]
+    gx = ctx_matmul(xn, p["slstm_in_w"], ctx, "sin").astype(jnp.float32)   # [B,S,4D]
     if state is None:
         z = jnp.zeros((B, D), jnp.float32)
         state = (z, z, z, jnp.full((B, D), 0.0, jnp.float32))
     h, state = slstm_seq(gx, p["slstm_r_w"].astype(jnp.float32), *state,
                          n_heads=n_heads)
-    out = hbfp_matmul(h.astype(x.dtype), p["slstm_out_w"], ctx.cfg,
-                      ctx.key_for("sout"))
+    out = ctx_matmul(h.astype(x.dtype), p["slstm_out_w"], ctx, "sout")
     return x + out, state
 
 

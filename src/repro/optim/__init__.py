@@ -1,2 +1,3 @@
+"""Optimizers (AdamW) and LR schedules (cosine / WSD / constant)."""
 from repro.optim.adamw import OptState, adamw_init, adamw_update
 from repro.optim.schedule import make_schedule

@@ -1,1 +1,2 @@
+"""Continuous-batching serving engine over the HBFP decode step."""
 from repro.serve.engine import ServeEngine

@@ -1,3 +1,4 @@
+"""Train/serve steps and the fault-tolerant Trainer loop."""
 from repro.train.train_step import (TrainState, init_train_state,
                                     make_train_step,
                                     make_scheduled_train_step)

@@ -80,6 +80,7 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
     quantization); cadence dispatch lives in `numerics.adaptive`.
     """
     compute_dtype = jnp.dtype(arch.dtype)
+    backend = arch.kernel_backend
     # `hbfp` may be a plain HBFPConfig (static, paper setting) or a
     # ResolvedPrecision (one schedule segment, possibly with per-layer weight
     # overrides). Split it into the in-graph activation config and the
@@ -88,14 +89,23 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
         if hbfp.is_fp32:
             hbfp = None
     if isinstance(hbfp, ResolvedPrecision):
+        # per-layer weight widths (schedule overrides / numerics controller
+        # decisions) are resolved by the shell's narrowing — the matmuls
+        # (sim ops AND the fused kernels' quantize_w) must not re-quantize
+        # at the segment's global width and crush a widened layer
         act_cfg = None if hbfp.global_cfg is None else \
             hbfp.global_cfg.with_(requantize_weights=False)
         param_cfg = hbfp
         stochastic = hbfp.any_stochastic
     elif hbfp is not None:
-        # weights are narrowed once per step by narrow_params below —
-        # skip the (idempotent) per-matmul weight re-quantization
-        act_cfg = param_cfg = hbfp.with_(requantize_weights=False)
+        # uniform precision: weights are narrowed once per step by
+        # narrow_params below, so per-matmul weight re-quantization is an
+        # idempotent no-op. The sim path skips it to save quantize work;
+        # the pallas path keeps it (quantize-in-VMEM is fused and free, and
+        # integral mantissas are what unlock the int8 MXU path) —
+        # DESIGN.md §10.
+        act_cfg = hbfp.with_(requantize_weights=(backend == "pallas"))
+        param_cfg = hbfp.with_(requantize_weights=False)
         stochastic = hbfp.rounding == "stochastic"
     else:
         act_cfg = param_cfg = None
@@ -119,7 +129,7 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
 
     def loss_at(narrow, batch, key):
         ctx = Ctx(act_cfg, key, compute_dtype, act_constraint, shard_fn,
-                  act_tap=act_tap)
+                  act_tap=act_tap, backend=backend)
         return loss_fn(narrow, batch, arch, ctx)
 
     def train_step(state: TrainState, batch, key):

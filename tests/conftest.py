@@ -1,3 +1,5 @@
+"""Shared test configuration: single-device CPU JAX and a hermetic
+autotune table (tests must not read/write the operator's tuning table)."""
 import os
 
 # Tests run single-device (the dry-run sets its own 512-device flag in a
@@ -5,5 +7,19 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True)
+def _hermetic_autotune_table(monkeypatch, tmp_path):
+    """Point the kernel tile-tuning table at a per-test temp path so test
+    numerics never depend on results/autotune_kernels.json (an untracked
+    artifact kernel_bench mutates) — and tests never pollute it. Tests
+    that exercise the table explicitly re-set the env var themselves."""
+    from repro.kernels import autotune
+    monkeypatch.setenv(autotune.TABLE_ENV, str(tmp_path / "autotune.json"))
+    autotune.invalidate_cache()
+    yield
+    autotune.invalidate_cache()

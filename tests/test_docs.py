@@ -20,6 +20,15 @@ def test_doc_links_resolve():
     assert r.returncode == 0, r.stdout + r.stderr
 
 
+def test_module_docstrings_present():
+    """Every module under src/repro/ opens with a docstring (the CI docs
+    lane runs the same check via tools/check_docstrings.py)."""
+    r = subprocess.run([sys.executable,
+                        os.path.join(ROOT, "tools", "check_docstrings.py")],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
 def test_design_sections_cited_by_source_exist():
     """Every `DESIGN.md §N` cited anywhere in src/benchmarks/examples must
     be a real section heading — no more phantom design-doc references."""

@@ -10,7 +10,7 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOCS = ["README.md", "docs/DESIGN.md", "ROADMAP.md"]
+DOCS = ["README.md", "docs/DESIGN.md", "docs/KERNELS.md", "ROADMAP.md"]
 _TOP = ("src/", "tests/", "benchmarks/", "examples/", "docs/", "tools/")
 
 
@@ -37,7 +37,10 @@ def main() -> int:
         with open(p) as f:
             text = f.read()
         for ref in sorted(referenced_paths(text)):
-            if not os.path.exists(os.path.join(ROOT, ref)):
+            # markdown links resolve relative to the document; backticked
+            # repo paths are written repo-relative — accept either
+            if not (os.path.exists(os.path.join(os.path.dirname(p), ref))
+                    or os.path.exists(os.path.join(ROOT, ref))):
                 missing.append((doc, ref))
     if missing:
         for doc, ref in missing:

@@ -1,0 +1,48 @@
+#!/usr/bin/env python3
+"""Docstring check: every Python module under src/repro/ must open with a
+module-level docstring (CI docs lane, next to check_doc_links.py; also run
+by tests/test_docs.py).
+
+The docstring must be the module's FIRST statement (ast.get_docstring) —
+a string placed after imports or os.environ setup does not count, because
+help()/pydoc and this repo's doc tooling won't see it.
+"""
+import ast
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src", "repro")
+
+
+def missing_docstrings(base=SRC):
+    out = []
+    for dirpath, dirnames, files in os.walk(base):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in sorted(files):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path) as f:
+                try:
+                    tree = ast.parse(f.read(), filename=path)
+                except SyntaxError as e:
+                    out.append((path, f"syntax error: {e}"))
+                    continue
+            if not ast.get_docstring(tree):
+                out.append((path, "missing module docstring"))
+    return out
+
+
+def main() -> int:
+    bad = missing_docstrings()
+    if bad:
+        for path, why in bad:
+            print(f"BAD: {os.path.relpath(path, ROOT)}: {why}")
+        return 1
+    print("docstring check OK (src/repro)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
