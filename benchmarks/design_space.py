@@ -11,29 +11,25 @@ per-layer mixed precision) against the static formats:
 
     PYTHONPATH=src python benchmarks/design_space.py --schedule
 """
-import dataclasses
-
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.core import (HBFPConfig, constant, staircase, warmup_then_narrow)
+from repro.core import HBFPConfig, staircase, warmup_then_narrow
 from repro.data import SyntheticLM
 from repro.models import init_params
 from repro.optim import make_schedule
-from repro.train import (init_train_state, make_scheduled_train_step,
-                         make_train_step)
+from repro.precision import PrecisionPolicy, RoleWidth, as_policy
+from repro.train import init_train_state, make_step
 
 
-def _final_loss(cfg, steps=40, seed=0):
+def _final_loss(spec, steps=40, seed=0):
+    """Train the smoke transformer under one precision policy (any spec
+    kind `precision.as_policy` accepts) and return the tail-mean loss."""
     arch = get_arch("yi-9b").smoke()
     pipe = SyntheticLM(arch.vocab_size, 33, 8, seed=seed)
     sched = make_schedule("constant", base_lr=2e-3, warmup_steps=2,
                           total_steps=steps)
-    if hasattr(cfg, "segments"):  # PrecisionSchedule ⇒ host dispatcher
-        step = make_scheduled_train_step(arch, cfg, sched)
-    else:
-        step = jax.jit(make_train_step(arch, cfg, sched))
+    step = make_step(arch, as_policy(spec), sched)
     state = init_train_state(jax.random.key(0), arch, init_params)
     losses = []
     for i in range(steps):
@@ -73,33 +69,41 @@ def run(log=print):
 
 
 def run_schedules(log=print, steps=60):
-    """Sweep precision-schedule shapes end-to-end (final-loss delta vs fp32).
+    """Sweep precision policies end-to-end (final-loss delta vs fp32).
 
     Shapes: constant (static-format control), Accuracy-Boosters staircase
     (narrow for ~2/3 of the run, widened at the end), warmup-then-narrow
-    (the transpose), and per-layer mixed precision (narrow body, 12-bit
-    lm_head override).
+    (the transpose), per-layer mixed precision (narrow body, 12-bit
+    lm_head override), and the per-GEMM-role axis (4-bit fwd with 8-bit
+    wgrad — DESIGN.md §11).
     """
     base = HBFPConfig(8, 16, tile=24)
     shapes = [
-        ("const8", constant(base)),
+        ("const8", PrecisionPolicy(base=base)),
         ("stair4_8_16",
-         staircase(((0, 4), (steps * 2 // 3, 8), (steps * 5 // 6, 16)),
-                   base=base)),
+         PrecisionPolicy(schedule=staircase(
+             ((0, 4), (steps * 2 // 3, 8), (steps * 5 // 6, 16)),
+             base=base))),
         ("warm12_narrow4",
-         warmup_then_narrow(12, 4, steps // 4, base=base)),
+         PrecisionPolicy(schedule=warmup_then_narrow(
+             12, 4, steps // 4, base=base))),
         ("layerwise4_head12",
-         constant(base.with_(mantissa_bits=4),
-                  overrides=(("lm_head", 12),))),
+         PrecisionPolicy(base=base.with_(mantissa_bits=4),
+                         layer_overrides=(("lm_head", 12),))),
+        # per-GEMM-role axis (DESIGN.md §11): 4-bit fwd, 8-bit wgrad —
+        # the weight-gradient signal survives while MACs stay narrow
+        ("role4_wgrad8",
+         PrecisionPolicy(base=base.with_(mantissa_bits=4),
+                         role_widths=(RoleWidth("wgrad", delta=4),))),
     ]
-    log("# Precision schedules (final-loss delta vs fp32)")
+    log("# Precision policies (final-loss delta vs fp32)")
     fp32 = _final_loss(None, steps=steps)
     log(f"  fp32 baseline loss {fp32:.4f}")
     rows = [("fp32", 0.0)]
     for name, sched in shapes:
         l = _final_loss(sched, steps=steps)
         rows.append((name, l - fp32))
-        log(f"  {name:20s} {sched.name:32s} Δloss {l - fp32:+.4f}")
+        log(f"  {name:20s} {sched.name:44s} Δloss {l - fp32:+.4f}")
     return rows
 
 
@@ -107,6 +111,6 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--schedule", action="store_true",
-                    help="sweep precision schedules instead of static formats")
+                    help="sweep precision policies instead of static formats")
     args = ap.parse_args()
     run_schedules() if args.schedule else run()

@@ -19,11 +19,11 @@ os.environ["XLA_FLAGS"] = \
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_arch
-from repro.core import HBFP8_16
 from repro.data import SyntheticLM
 from repro.models import init_params
 from repro.optim import make_schedule
-from repro.train import init_train_state, make_train_step
+from repro.precision import parse_policy
+from repro.train import init_train_state, make_step
 from repro.train.trainer import Trainer
 
 arch = get_arch("yi-9b").smoke()
@@ -31,13 +31,14 @@ pipe = SyntheticLM(arch.vocab_size, 33, 8, seed=4)
 sched = make_schedule("constant", base_lr=1e-3, warmup_steps=2,
                       total_steps=30)
 mesh = jax.make_mesh((len(jax.devices()),), ("data",))
-step_fn = jax.jit(make_train_step(arch, HBFP8_16, sched))
+policy = parse_policy("8")
+step_fn = make_step(arch, policy, sched)
 state = init_train_state(jax.random.key(0), arch, init_params)
 # shard the batch over whatever devices this incarnation has
 data_fn = lambda s: jax.device_put(
     pipe.batch(s), NamedSharding(mesh, P("data")))
 tr = Trainer(train_step=step_fn, init_state=state, data_fn=data_fn,
-             ckpt_dir=ckpt_dir, ckpt_every=10, hbfp=HBFP8_16)
+             ckpt_dir=ckpt_dir, ckpt_every=10, hbfp=policy)
 print(f"[{phase}] devices={len(jax.devices())} resumed_at={tr.start_step}")
 target = 20 if phase == "first" else 30
 st, m = tr.run(target, log_every=10)

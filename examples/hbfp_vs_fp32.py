@@ -9,17 +9,17 @@ import argparse
 import jax
 
 from repro.configs import get_arch
-from repro.core import HBFPConfig
 from repro.data import SyntheticLM
 from repro.models import init_params
 from repro.optim import make_schedule
-from repro.train import init_train_state, make_train_step
+from repro.precision import parse_policy
+from repro.train import init_train_state, make_step
 
 
-def train_curve(arch, cfg, steps, pipe):
+def train_curve(arch, policy, steps, pipe):
     sched = make_schedule("constant", base_lr=2e-3, warmup_steps=5,
                           total_steps=steps)
-    step = jax.jit(make_train_step(arch, cfg, sched))
+    step = make_step(arch, policy, sched)
     state = init_train_state(jax.random.key(0), arch, init_params)
     losses = []
     for i in range(steps):
@@ -57,10 +57,11 @@ def main():
     arch = get_arch(args.arch).smoke()
     pipe = SyntheticLM(arch.vocab_size, 33, 8, seed=11)
     curves = {}
-    for name, cfg in (("fp32", None),
-                      ("hbfp8_16", HBFPConfig(8, 16, tile=24)),
-                      ("hbfp12_16", HBFPConfig(12, 16, tile=24))):
-        curves[name] = train_curve(arch, cfg, args.steps, pipe)
+    base24 = parse_policy("8").format().with_(tile=24)  # paper's FPGA tile
+    for name, policy in (("fp32", parse_policy("fp32")),
+                         ("hbfp8_16", parse_policy("8", base=base24)),
+                         ("hbfp12_16", parse_policy("12", base=base24))):
+        curves[name] = train_curve(arch, policy, args.steps, pipe)
         print(f"{name:10s} first={curves[name][0]:.4f} "
               f"last={curves[name][-1]:.4f}")
     print(ascii_plot(curves))

@@ -50,3 +50,21 @@ for cfg in (HBFPConfig(4, 16, tile=24), HBFPConfig(12, 16, tile=24)):
     yq = hbfp_matmul(x, w, cfg)
     print(f"{cfg.name}: rel err "
           f"{float(jnp.abs(yq - x @ w).max() / jnp.abs(x @ w).max()):.2e}")
+
+# ---------------------------------------------------------------------------
+# 5. PrecisionPolicy — the one knob (DESIGN.md §11). Format, schedule,
+#    per-layer overrides, per-GEMM-role widths, and kernel backend compose
+#    into a single site-addressed resolver; train with
+#    train.make_step(arch, policy, lr_schedule).
+# ---------------------------------------------------------------------------
+from repro.precision import PrecisionPolicy, QuantSite
+
+policy = PrecisionPolicy.parse("4@0,8@90%; wgrad+2; lm_head:8",
+                               total_steps=1000)
+for site, step in ((QuantSite("layers/ffn_wg", "fwd"), 0),
+                   (QuantSite("layers/ffn_wg", "wgrad", "grad"), 0),
+                   (QuantSite("lm_head", "fwd"), 0),
+                   (QuantSite("layers/ffn_wg", "fwd"), 950)):
+    rq = policy.resolve(site, step=step)
+    print(f"step {step:4d} {str(site):28s} -> {rq.mantissa_bits:2d} bits "
+          f"({rq.source}, backend={rq.backend})")

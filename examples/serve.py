@@ -10,8 +10,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import arch_ids, get_arch
-from repro.core import HBFP8_16
 from repro.models import init_params, make_cache
+from repro.precision import parse_policy
 from repro.train.serve_step import (make_decode_fn, make_prefill_fn,
                                     narrow_serving_params,
                                     prefill_to_decode_cache)
@@ -24,6 +24,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--gen-len", type=int, default=20)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--precision", default="8",
+                    help='serving policy spec, e.g. "8", "8; lm_head:12"')
     args = ap.parse_args()
 
     arch = get_arch(args.arch).smoke()
@@ -31,11 +33,13 @@ def main():
         raise SystemExit("this demo serves token-in/token-out archs")
     B, P, G = args.batch, args.prompt_len, args.gen_len
 
-    # load + narrow once (paper: weights stored/served in narrow BFP)
+    # load + narrow once (paper: weights stored/served in narrow BFP);
+    # the serving policy resolves per-layer widths at load time
+    policy = parse_policy(args.precision)
     params = narrow_serving_params(
-        init_params(jax.random.key(0), arch), arch, HBFP8_16)
-    prefill_fn = jax.jit(make_prefill_fn(arch, HBFP8_16))
-    decode_fn = jax.jit(make_decode_fn(arch, HBFP8_16))
+        init_params(jax.random.key(0), arch), arch, policy)
+    prefill_fn = jax.jit(make_prefill_fn(arch, policy))
+    decode_fn = jax.jit(make_decode_fn(arch, policy))
 
     prompts = jax.random.randint(jax.random.key(1), (B, P), 0,
                                  arch.vocab_size)

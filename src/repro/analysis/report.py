@@ -66,7 +66,12 @@ def roofline_table(results):
 def numerics_table(snapshot, widths=None):
     """Per-layer fidelity table from one telemetry snapshot (the
     `{source: {layer: stats}}` dict a `RingBuffer` entry holds; see
-    `numerics.stats.stats_to_host`)."""
+    `numerics.stats.stats_to_host`). Snapshots recorded by
+    `train.make_step` carry per-tap resolved widths ("widths": weight tap
+    at the fwd width, grad tap at the wgrad width — DESIGN.md §11), which
+    take precedence over the controller-width fallback so per-role
+    policies render with both widths visible."""
+    tap_widths = snapshot.get("widths", {})
     lines = ["| layer | bits | source | SQNR dB | clip frac | sat tiles | "
              "FTZ frac | exp spread |",
              "|---|---|---|---|---|---|---|---|"]
@@ -74,6 +79,7 @@ def numerics_table(snapshot, widths=None):
         for layer, s in sorted(snapshot.get(source, {}).items()):
             bits = "-" if widths is None else widths.get(layer, widths.get(
                 "__base__", "-"))
+            bits = tap_widths.get(source, {}).get(layer, bits)
             lines.append(
                 f"| {layer} | {bits} | {source} | {s['sqnr_db']:.1f} | "
                 f"{s['clip_frac']:.2e} | {s.get('sat_tile_frac', 0.0):.3f} | "

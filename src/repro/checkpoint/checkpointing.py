@@ -32,24 +32,26 @@ import numpy as np
 from repro.core import bfp
 from repro.core.formats import HBFPConfig
 from repro.core.opt_shell import is_hbfp_weight, resolve_param_cfg
-from repro.core.schedule_precision import (PrecisionSchedule,
-                                           precision_from_dict,
+from repro.core.schedule_precision import (precision_from_dict,
                                            precision_to_dict)
 
 _SEP = "."
 
 
 def _resolved_at(hbfp, step: int):
-    """Concrete per-parameter precision at `step`: HBFPConfig passes through,
-    a PrecisionSchedule resolves to its current segment."""
-    if isinstance(hbfp, PrecisionSchedule):
+    """Concrete per-parameter precision at `step`: HBFPConfig passes
+    through; a PrecisionSchedule or a `precision.PrecisionPolicy` (anything
+    with a segment table) resolves to its current segment — packing uses
+    the step-resolved per-layer widths, overrides included."""
+    if hasattr(hbfp, "resolve_segment"):
         return hbfp.resolve_segment(hbfp.segment_index(step))
     return hbfp
 
 
 def load_precision(meta: dict):
-    """Inverse of the meta.json "precision" entry: None, HBFPConfig, or
-    PrecisionSchedule (whatever was passed to save_checkpoint)."""
+    """Inverse of the meta.json "precision" entry: None, HBFPConfig,
+    PrecisionSchedule, or PrecisionPolicy (whatever was passed to
+    save_checkpoint)."""
     return precision_from_dict(meta.get("precision"))
 
 

@@ -66,17 +66,19 @@ class ArchConfig:
     loss_chunk: int = 2048     # CE chunking (0 = off); bounds f32 logits temp
     ssm_unroll: bool = False   # python-unroll SSD/mLSTM chunk scans (roofline)
     bfp_kv_cache: bool = False  # 8-bit BFP K/V cache (beyond-paper, serving)
-    # Dot-product execution backend (DESIGN.md §10): "sim" = quantize ops +
-    # XLA matmul (the paper's GPU-simulation semantics, bit-stable default);
-    # "pallas" = fused quantize-in-VMEM Pallas kernels with custom-VJP
-    # backward GEMMs (kernels/linear.py; interpret mode on CPU). Batched-
-    # weight and activation-rhs contractions fall back to "sim" per call.
+    # Unified precision policy (DESIGN.md §11): ONE spec string for the
+    # HBFP format, step schedule, per-GEMM-role widths, per-layer
+    # overrides, and kernel backend — `precision.parse_policy` grammar,
+    # e.g. "4@0,8@90%; wgrad+2; lm_head:8; backend=pallas". None ⇒ the
+    # driver picks the format (paper default hbfp8_16). Resolve with
+    # `self.policy(total_steps)`.
+    precision: Optional[str] = None
+    # DEPRECATED (kept one release; DESIGN.md §11 migration table): the
+    # pre-policy split knobs. `policy()` shims them onto the new resolver
+    # bit-exactly and emits a DeprecationWarning. kernel_backend doubles as
+    # the default backend for legacy `make_train_step`-style calls and for
+    # `precision` strings that omit "backend=".
     kernel_backend: str = "sim"
-    # HBFP precision schedule (DESIGN.md §8). `hbfp_spec` is a
-    # schedule_precision.from_spec string ("8", "4@0,8@90%,16@95%", ...);
-    # None ⇒ the driver picks the format (paper default hbfp8_16).
-    # `hbfp_overrides` are per-layer (name-fragment, mantissa-width) pairs;
-    # width 0 ⇒ that parameter stays FP.
     hbfp_spec: Optional[str] = None
     hbfp_overrides: Tuple[Tuple[str, int], ...] = ()
 
@@ -123,10 +125,34 @@ class ArchConfig:
         inactive = L * (self.n_experts - self.top_k) * 3 * D * F
         return self.n_params() - inactive
 
+    def policy(self, total_steps: Optional[int] = None):
+        """This arch's `precision.PrecisionPolicy` (None if neither
+        `precision` nor the deprecated `hbfp_spec` is declared). %-based
+        segment starts need `total_steps`. The deprecated-shim path
+        (`hbfp_spec`/`hbfp_overrides`/`kernel_backend`) maps bit-exactly
+        onto the new resolver and warns once per call."""
+        from repro.precision.policy import as_policy, parse_policy
+        if self.precision is not None:
+            return parse_policy(self.precision, total_steps=total_steps,
+                                backend=self.kernel_backend)
+        if self.hbfp_spec is None:
+            return None
+        import warnings
+        warnings.warn(
+            "ArchConfig.hbfp_spec/hbfp_overrides are deprecated; set the "
+            "unified ArchConfig.precision policy string instead "
+            "(DESIGN.md §11)", DeprecationWarning, stacklevel=2)
+        from repro.core.schedule_precision import from_spec
+        ovr = tuple((f, None if w == 0 else int(w))
+                    for f, w in self.hbfp_overrides)
+        sched = from_spec(self.hbfp_spec, total_steps=total_steps,
+                          overrides=ovr)
+        return as_policy(sched, backend=self.kernel_backend)
+
     def precision_schedule(self, total_steps: Optional[int] = None):
-        """Build this arch's PrecisionSchedule from `hbfp_spec` /
-        `hbfp_overrides` (None if no spec is declared). %-based segment
-        starts need `total_steps`."""
+        """DEPRECATED pre-policy accessor (kept one release): the
+        `PrecisionSchedule` from `hbfp_spec`/`hbfp_overrides` (None if no
+        spec is declared). Use `policy()` instead."""
         if self.hbfp_spec is None:
             return None
         from repro.core.schedule_precision import from_spec

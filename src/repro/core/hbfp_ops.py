@@ -65,24 +65,62 @@ def _q_b(b, cfg: HBFPConfig, key, kind: str):
     return _q_act(b, cfg, key, contract_axis=b.ndim - 2)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _hbfp_matmul(cfg: HBFPConfig, w_kind: str, x, w, key):
+def _role_key(key, i: int, role: str, role_cfg: HBFPConfig,
+              base_cfg: HBFPConfig):
+    """Operand key for one GEMM role: identical to `_fold(key, i)` at the
+    base (fwd) width — the tensor replays the same draws it got in the
+    forward — and folded with a (role, width) salt otherwise, so a role at
+    its own width never consumes another role's stream (DESIGN.md §11)."""
+    k = _fold(key, i)
+    if k is None:
+        return None
+    from repro.kernels.common import role_stream_salt
+    salt = role_stream_salt(role, role_cfg.mantissa_bits,
+                            base_cfg.mantissa_bits)
+    return jax.random.fold_in(k, salt) if salt else k
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _hbfp_matmul(cfg: HBFPConfig, dgrad_cfg: Optional[HBFPConfig],
+                 wgrad_cfg: Optional[HBFPConfig], w_kind: str, x, w, key):
     xq = _q_act(x, cfg, _fold(key, 0), contract_axis=x.ndim - 1)
     wq = _q_b(w, cfg, _fold(key, 1), w_kind)
     return jnp.matmul(xq, wq)
 
 
-def _fwd(cfg, w_kind, x, w, key):
+def _fwd(cfg, dgrad_cfg, wgrad_cfg, w_kind, x, w, key):
     xq = _q_act(x, cfg, _fold(key, 0), contract_axis=x.ndim - 1)
     wq = _q_b(w, cfg, _fold(key, 1), w_kind)
-    return jnp.matmul(xq, wq), (xq, wq, key)
+    y = jnp.matmul(xq, wq)
+    if dgrad_cfg is None and wgrad_cfg is None:
+        # uniform role widths: the backward reuses the forward's quantized
+        # operands verbatim (the pre-policy path, bit-identical)
+        return y, (xq, wq, key)
+    # per-role widths: keep the raw operands; each backward GEMM quantizes
+    # at its own width from its own rounding stream
+    return y, (x, w, key)
 
 
-def _bwd(cfg, w_kind, res, g):
-    xq, wq, key = res
-    gq = _q_act(g, cfg, _fold(key, 2), contract_axis=g.ndim - 1)
+def _bwd(cfg, dgrad_cfg, wgrad_cfg, w_kind, res, g):
+    a, b, key = res
+    if dgrad_cfg is None and wgrad_cfg is None:
+        xq, wq = a, b
+        gq_d = _q_act(g, cfg, _fold(key, 2), contract_axis=g.ndim - 1)
+        gq_w = gq_d
+    else:
+        dcfg = dgrad_cfg if dgrad_cfg is not None else cfg
+        wcfg = wgrad_cfg if wgrad_cfg is not None else cfg
+        # dgrad operands at the dgrad width, wgrad operands at the wgrad
+        # width (the per-GEMM quantization the Pallas kernels fuse)
+        wq = _q_b(b, dcfg, _role_key(key, 1, "dgrad", dcfg, cfg), w_kind)
+        gq_d = _q_act(g, dcfg, _role_key(key, 2, "dgrad", dcfg, cfg),
+                      contract_axis=g.ndim - 1)
+        xq = _q_act(a, wcfg, _role_key(key, 0, "wgrad", wcfg, cfg),
+                    contract_axis=a.ndim - 1)
+        gq_w = _q_act(g, wcfg, _role_key(key, 2, "wgrad", wcfg, cfg),
+                      contract_axis=g.ndim - 1)
     # dx[..., M, K] = Qa(g)[..., M, N] @ Qw(w)^T[..., N, K]
-    dx = jnp.matmul(gq, jnp.swapaxes(wq, -1, -2))
+    dx = jnp.matmul(gq_d, jnp.swapaxes(wq, -1, -2))
     # sum over broadcast batch dims of x (GQA-style size-1 dims)
     for ax in range(dx.ndim - 2):
         if xq.shape[ax] == 1 and dx.shape[ax] != 1:
@@ -90,10 +128,10 @@ def _bwd(cfg, w_kind, res, g):
     # dw: per-input outer products accumulated in FP over the token axis.
     if wq.ndim == 2:
         t_x = xq.reshape(-1, xq.shape[-1])
-        t_g = gq.reshape(-1, gq.shape[-1])
+        t_g = gq_w.reshape(-1, gq_w.shape[-1])
         dw = jnp.matmul(t_x.T, t_g)
     else:
-        dw = jnp.matmul(jnp.swapaxes(xq, -1, -2), gq)
+        dw = jnp.matmul(jnp.swapaxes(xq, -1, -2), gq_w)
         # sum over broadcast batch dims if w had size-1 dims
         for ax in range(dw.ndim - 2):
             if wq.shape[ax] == 1 and dw.shape[ax] != 1:
@@ -109,7 +147,9 @@ _hbfp_matmul.defvjp(_fwd, _bwd)
 def hbfp_matmul(x: jax.Array, w: jax.Array,
                 cfg: Optional[HBFPConfig],
                 key: Optional[jax.Array] = None,
-                w_kind: str = "weight") -> jax.Array:
+                w_kind: str = "weight", *,
+                dgrad_cfg: Optional[HBFPConfig] = None,
+                wgrad_cfg: Optional[HBFPConfig] = None) -> jax.Array:
     """BFP matmul  y = Q(x) @ Q(w)  with BFP backward passes.
 
     Args:
@@ -122,6 +162,11 @@ def hbfp_matmul(x: jax.Array, w: jax.Array,
       w_kind: "weight" ⇒ square-tile exponents (paper §4.2); "act" ⇒ the rhs
         is itself an activation (attention K/V) and gets contraction-aligned
         per-vector exponents.
+      dgrad_cfg/wgrad_cfg: optional per-GEMM-role formats (DESIGN.md §11,
+        `PrecisionPolicy.role_widths`): the backward-data / backward-weight
+        GEMMs quantize their operands at these widths instead of `cfg`.
+        None (or equal to `cfg`) keeps the uniform path, which reuses the
+        forward's quantized operands bit-for-bit.
     """
     if cfg is None:
         return jnp.matmul(x, w)
@@ -130,7 +175,11 @@ def hbfp_matmul(x: jax.Array, w: jax.Array,
     kd = None if key is None else jax.random.key_data(key)
     if cfg.rounding == "stochastic" and kd is None:
         raise ValueError("stochastic rounding requires a key")
-    return _hbfp_matmul(cfg, w_kind, x, w, kd)
+    if dgrad_cfg == cfg:
+        dgrad_cfg = None
+    if wgrad_cfg == cfg:
+        wgrad_cfg = None
+    return _hbfp_matmul(cfg, dgrad_cfg, wgrad_cfg, w_kind, x, w, kd)
 
 
 def hbfp_linear(x, w, b, cfg, key=None):

@@ -66,13 +66,17 @@ def param_fold(key, name: str):
     return jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
 
 
-def resolve_param_cfg(cfg, name: str) -> Optional[HBFPConfig]:
-    """Concrete config for one parameter: HBFPConfig passes through; a
-    ResolvedPrecision (anything with `.for_param`) is asked per name."""
+def resolve_param_cfg(cfg, name: str,
+                      role: str = "fwd") -> Optional[HBFPConfig]:
+    """Concrete config for one parameter in one GEMM role: HBFPConfig
+    passes through; a ResolvedPrecision / precision.ResolvedPolicy
+    (anything with `.for_param`) is asked per (name, role). The shell
+    narrows weights at the fwd width; the numerics gradient taps resolve
+    role="wgrad" (DESIGN.md §11)."""
     if cfg is None:
         return None
     fp = getattr(cfg, "for_param", None)
-    return fp(name) if fp is not None else cfg
+    return fp(name, role) if fp is not None else cfg
 
 
 def _quantize_tree(params, cfg, key, wide: bool):

@@ -68,7 +68,12 @@ class ResolvedPrecision:
     overrides: Tuple[Tuple[str, Optional[HBFPConfig]], ...] = ()
     exact: bool = False
 
-    def for_param(self, name: str) -> Optional[HBFPConfig]:
+    def for_param(self, name: str,
+                  role: str = "fwd") -> Optional[HBFPConfig]:
+        """`role` is accepted for signature-compatibility with
+        `precision.ResolvedPolicy.for_param` and ignored — per-GEMM-role
+        widths are a policy concept (DESIGN.md §11)."""
+        del role
         lname = name.lower()
         for frag, cfg in self.overrides:
             if frag.lower() == lname if self.exact else frag.lower() in lname:
@@ -301,7 +306,8 @@ def config_from_dict(d: Optional[dict]) -> Optional[HBFPConfig]:
 
 
 def precision_to_dict(spec) -> Optional[dict]:
-    """Serialize None / HBFPConfig / PrecisionSchedule (checkpoint meta)."""
+    """Serialize None / HBFPConfig / PrecisionSchedule / PrecisionPolicy
+    (checkpoint meta; anything with `.to_dict` serializes itself)."""
     if spec is None:
         return None
     if isinstance(spec, HBFPConfig):
@@ -312,6 +318,10 @@ def precision_to_dict(spec) -> Optional[dict]:
 def precision_from_dict(d: Optional[dict]):
     if d is None:
         return None
+    if d.get("kind") == "policy":
+        # lazy: precision composes on top of this module (DESIGN.md §11)
+        from repro.precision.policy import PrecisionPolicy
+        return PrecisionPolicy.from_dict(d)
     if d.get("kind") == "schedule":
         return PrecisionSchedule.from_dict(d)
     return config_from_dict(d)

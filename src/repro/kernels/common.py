@@ -24,6 +24,33 @@ STREAM_X = 0x00000000
 STREAM_G = 0x20000000
 STREAM_W = 0x40000000
 
+# Per-GEMM-role seed salts (DESIGN.md §11): with per-role mantissa widths
+# (PrecisionPolicy role_widths, e.g. "wgrad+2") a tensor is quantized at
+# DIFFERENT widths in different GEMMs. The element-index streams above are
+# shared by design — same width ⇒ identical draws ("quantize once, use
+# everywhere") — but a role running at its own width must not consume
+# another role's stream positions, or the two quantizations become
+# correlated through the shared uniforms. `role_stream_salt` returns 0 at
+# the base width (preserving the replay property bit-for-bit) and a
+# (role, width)-specific seed salt otherwise.
+ROLE_STREAM_SALT = {
+    "fwd": 0x00000000,          # the base stream: never salted
+    "dgrad": 0x1B873593,        # murmur3 c2
+    "wgrad": 0x6A09E667,        # frac(sqrt(2)) — sha-2 IV
+    "attn_qk": 0x3C6EF372,      # frac(sqrt(3))
+    "attn_pv": 0x510E527F,      # frac(sqrt(5))
+}
+
+
+def role_stream_salt(role: str, m_bits: int, base_bits: int) -> int:
+    """Seed salt for quantizing one operand in GEMM role `role` at width
+    `m_bits` when the policy's base (fwd) width is `base_bits`. 0 ⇒ use the
+    unsalted stream (identical draws to the fwd quantization of the same
+    tensor); nonzero ⇒ a disjoint counter stream for this (role, width)."""
+    if m_bits == base_bits:
+        return 0
+    return (ROLE_STREAM_SALT[role] ^ (m_bits * 0x9E3779B9)) & 0x7FFFFFFF
+
 
 def max_exponent(amax: jax.Array) -> jax.Array:
     """floor(log2 amax) by f32 bit-field extraction (kernel-safe)."""

@@ -31,18 +31,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import autotune, ops
+from repro.kernels.common import role_stream_salt
 from repro.kernels.hbfp_matmul import (hbfp_dgrad_pallas, hbfp_matmul_pallas,
                                        hbfp_wgrad_pallas)
 
 
 class KernelSpec(NamedTuple):
-    """Static (hashable) kernel configuration for one matmul call site."""
+    """Static (hashable) kernel configuration for one matmul call site.
+
+    `m_dgrad`/`m_wgrad` are the per-GEMM-role mantissa widths (DESIGN.md
+    §11, `PrecisionPolicy.role_widths`); they default to `mantissa_bits`
+    (the fwd width), which is the uniform pre-policy behaviour."""
     mantissa_bits: int
     stochastic: bool
     quantize_w: bool
     fwd: Tuple[int, int, int]     # (bm, bk, bn): M/K-contraction/N tiles
     dgrad: Tuple[int, int, int]   # (bm, bk, bn): M/K/N-contraction tiles
     wgrad: Tuple[int, int, int]   # (bm, bk, bn): M-contraction/K/N tiles
+    m_dgrad: int = 0              # 0 ⇒ mantissa_bits
+    m_wgrad: int = 0
 
 
 def _pad2(a, mr, mc):
@@ -77,23 +84,36 @@ def _vjp_fwd(spec, x2, w, seed):
     return _fwd_impl(spec, x2, w, seed), (x2, w, seed)
 
 
+def _role_seed(seed, role: str, m_bits: int, base_bits: int):
+    """Seed for one backward GEMM: unsalted at the fwd width (the kernels'
+    element-index streams replay the forward's draws), xor-salted when the
+    role runs at its own width so it never consumes another role's stream
+    (kernels/common.py role_stream_salt; pinned by test)."""
+    salt = role_stream_salt(role, m_bits, base_bits)
+    return seed if not salt else seed ^ jnp.int32(salt)
+
+
 def _vjp_bwd(spec, res, g):
     x2, w, seed = res
     M, K = x2.shape
     N = w.shape[1]
+    m_d = spec.m_dgrad or spec.mantissa_bits
+    m_w = spec.m_wgrad or spec.mantissa_bits
     g = g.astype(jnp.float32)
     # dgrad: dx[M,K] = Q(g)·Q(w)^T, contraction over N
     bm, bk, bn = autotune.clip_tiles(spec.dgrad, M, K, N)
     dx = hbfp_dgrad_pallas(
-        _pad2(g, bm, bn), _pad2(w, bk, bn), seed,
-        mantissa_bits=spec.mantissa_bits, stochastic=spec.stochastic,
+        _pad2(g, bm, bn), _pad2(w, bk, bn),
+        _role_seed(seed, "dgrad", m_d, spec.mantissa_bits),
+        mantissa_bits=m_d, stochastic=spec.stochastic,
         quantize_w=spec.quantize_w, bm=bm, bk=bk, bn=bn,
         interpret=ops.INTERPRET)[:M, :K]
     # wgrad: dw[K,N] = Q(x)^T·Q(g), contraction over the token axis M
     bm, bk, bn = autotune.clip_tiles(spec.wgrad, M, K, N)
     dw = hbfp_wgrad_pallas(
-        _pad2(x2, bm, bk), _pad2(g, bm, bn), seed,
-        mantissa_bits=spec.mantissa_bits, stochastic=spec.stochastic,
+        _pad2(x2, bm, bk), _pad2(g, bm, bn),
+        _role_seed(seed, "wgrad", m_w, spec.mantissa_bits),
+        mantissa_bits=m_w, stochastic=spec.stochastic,
         bm=bm, bk=bk, bn=bn, interpret=ops.INTERPRET)[:K, :N]
     return dx.astype(x2.dtype), dw.astype(w.dtype), _zero_cotangent(seed)
 
@@ -110,21 +130,32 @@ def seed_from_key(key) -> jax.Array:
 
 
 def resolve_spec(cfg, M: int, K: int, N: int,
-                 dtype: str = "float32") -> KernelSpec:
+                 dtype: str = "float32",
+                 dgrad_cfg=None, wgrad_cfg=None) -> KernelSpec:
     """Build the static KernelSpec for one call site: rounding/width from
-    the HBFPConfig, per-GEMM tiles from the autotuner table (trace time)."""
-    args = dict(dtype=dtype, mantissa_bits=cfg.mantissa_bits)
+    the HBFPConfig, per-GEMM tiles from the autotuner table (trace time).
+    `dgrad_cfg`/`wgrad_cfg` carry per-role widths (DESIGN.md §11); each
+    GEMM's tile lookup is keyed by its own role width, so a "wgrad+2"
+    policy consults the m-matched autotune cells (docs/KERNELS.md)."""
+    m_d = (dgrad_cfg or cfg).mantissa_bits
+    m_w = (wgrad_cfg or cfg).mantissa_bits
     return KernelSpec(
         mantissa_bits=cfg.mantissa_bits,
         stochastic=cfg.rounding == "stochastic",
         quantize_w=cfg.requantize_weights,
-        fwd=autotune.lookup("matmul_fwd", M, K, N, **args),
-        dgrad=autotune.lookup("matmul_dgrad", M, K, N, **args),
-        wgrad=autotune.lookup("matmul_wgrad", M, K, N, **args))
+        fwd=autotune.lookup("matmul_fwd", M, K, N, dtype=dtype,
+                            mantissa_bits=cfg.mantissa_bits),
+        dgrad=autotune.lookup("matmul_dgrad", M, K, N, dtype=dtype,
+                              mantissa_bits=m_d),
+        wgrad=autotune.lookup("matmul_wgrad", M, K, N, dtype=dtype,
+                              mantissa_bits=m_w),
+        m_dgrad=0 if m_d == cfg.mantissa_bits else m_d,
+        m_wgrad=0 if m_w == cfg.mantissa_bits else m_w)
 
 
 def hbfp_matmul_kernel(x: jax.Array, w: jax.Array, cfg,
-                       key: Optional[jax.Array] = None) -> jax.Array:
+                       key: Optional[jax.Array] = None, *,
+                       dgrad_cfg=None, wgrad_cfg=None) -> jax.Array:
     """BFP matmul y = Q(x)·Q(w) with fused-kernel BFP backward passes.
 
     Drop-in for `hbfp_ops.hbfp_matmul(x, w, cfg, key)` on the Pallas
@@ -132,6 +163,8 @@ def hbfp_matmul_kernel(x: jax.Array, w: jax.Array, cfg,
     x: [..., M, K] (leading dims flattened into M); w: [K, N] — batched
     weights stay on the sim path (`models.layers.ctx_matmul` falls back).
     cfg None or ≥ f32-mantissa width ⇒ plain FP matmul, like the sim path.
+    `dgrad_cfg`/`wgrad_cfg` (optional) run the backward GEMMs at their own
+    mantissa widths (per-role policy widths; rounding/tiling stay cfg's).
     """
     if cfg is None or cfg.mantissa_bits >= 24:
         return jnp.matmul(x, w)
@@ -146,6 +179,7 @@ def hbfp_matmul_kernel(x: jax.Array, w: jax.Array, cfg,
         seed = seed_from_key(key)
     else:
         seed = jnp.zeros((1, 1), jnp.int32)
-    spec = resolve_spec(cfg, x2.shape[0], K, N, dtype=str(x.dtype))
+    spec = resolve_spec(cfg, x2.shape[0], K, N, dtype=str(x.dtype),
+                        dgrad_cfg=dgrad_cfg, wgrad_cfg=wgrad_cfg)
     y = _matmul_vjp(spec, x2, w, seed)
     return y.reshape(*x.shape[:-1], N)

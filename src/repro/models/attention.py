@@ -191,11 +191,16 @@ def attention_layer(x, p, ctx, *, n_heads, n_kv_heads, head_dim,
     if cache is None:
         # fused flash path (DESIGN.md §10): gate on static facts only — the
         # arch's attention pattern (flash_ok), the backend, nearest rounding
-        # (the flash kernels are deterministic), and block divisibility
+        # (the flash kernels are deterministic), block divisibility, and no
+        # per-role attention widths (FlashSpec runs both contractions at
+        # one width; attn_qk/attn_pv policies stay on the sim path, which
+        # honors them — DESIGN.md §11)
         use_flash = (flash_ok and ctx.backend == "pallas"
                      and ctx.cfg is not None and ctx.cfg.quantize_attention
                      and ctx.cfg.rounding == "nearest"
-                     and _flash_block(S) is not None)
+                     and _flash_block(S) is not None
+                     and not any(rw.role in ("attn_qk", "attn_pv")
+                                 for rw in ctx.roles or ()))
         qpos = tok_pos if tok_pos.ndim == 2 else tok_pos
         if use_flash:
             out = flash_mha(q, k, v, ctx)

@@ -75,30 +75,60 @@ def apply_mrope(x, positions3, theta: float = 1e6,
 
 
 # ----------------------------------------------------------------------------
-# Dot-product dispatch (DESIGN.md §10)
+# Dot-product dispatch (DESIGN.md §10/§11)
 # ----------------------------------------------------------------------------
 
 _UNSET = object()
 
+# ctx_matmul sites that ARE one of the named attention roles: their role
+# width (PrecisionPolicy "attn_qk=…"/"attn_pv=…") adjusts the whole
+# contraction (fwd and its VJP) instead of splitting dgrad/wgrad.
+_ATTN_ROLE = {"qk": "attn_qk", "pv": "attn_pv"}
+
 
 def ctx_matmul(x, w, ctx, site: str, cfg=_UNSET, w_kind: str = "weight"):
-    """Route one model dot product through the Ctx's backend.
+    """Route one model dot product through the Ctx's resolved policy.
 
-    backend "sim" (default) is exactly the pre-existing path: one call to
-    `core.hbfp_ops.hbfp_matmul` with the same arguments (bit-identical by
-    construction; regression-tested). backend "pallas" sends 2-D
-    weight-kind matmuls through the fused-kernel custom-VJP path
+    This is the in-graph projection of `PrecisionPolicy.resolve`: the Ctx
+    carries one `precision.ResolvedPolicy` segment (global format +
+    per-GEMM-role widths + backend — per-layer overrides act on the weight
+    tree in the optimizer shell, since layers here run under lax.scan),
+    and each call site quantizes at `resolve(QuantSite(site, role, kind))`.
+
+    backend "sim" with no role widths is exactly the pre-policy path: one
+    call to `core.hbfp_ops.hbfp_matmul` with the same arguments
+    (bit-identical by construction; regression-tested). backend "pallas"
+    sends 2-D weight-kind matmuls through the fused-kernel custom-VJP path
     (`kernels/linear.py` — all three training GEMMs as Pallas kernels);
     batched weights and activation right-hand sides (attention scores, MoE
     per-expert weights) fall back to the sim path per call site.
     """
+    from repro.precision import role_width_for
     cfg = ctx.cfg if cfg is _UNSET else cfg
     key = ctx.key_for(site)
+    role = _ATTN_ROLE.get(site)
+    if role is not None:
+        rw = role_width_for(ctx.roles, role)
+        if rw is not None:
+            cfg = rw.apply(cfg)
+        return hbfp_matmul(x, w, cfg, key, w_kind=w_kind)
+    dgrad_cfg = wgrad_cfg = None
+    if cfg is not None and ctx.roles:
+        dg = role_width_for(ctx.roles, "dgrad")
+        wg = role_width_for(ctx.roles, "wgrad")
+        # .apply returns `cfg` itself when the width is unchanged; None
+        # keeps the uniform (reuse-the-forward-quantization) VJP path
+        dgrad_cfg = dg.apply(cfg) if dg is not None else None
+        wgrad_cfg = wg.apply(cfg) if wg is not None else None
+        dgrad_cfg = None if dgrad_cfg is cfg else dgrad_cfg
+        wgrad_cfg = None if wgrad_cfg is cfg else wgrad_cfg
     if (ctx.backend == "pallas" and cfg is not None and w.ndim == 2
             and w_kind == "weight"):
         from repro.kernels.linear import hbfp_matmul_kernel
-        return hbfp_matmul_kernel(x, w, cfg, key)
-    return hbfp_matmul(x, w, cfg, key, w_kind=w_kind)
+        return hbfp_matmul_kernel(x, w, cfg, key, dgrad_cfg=dgrad_cfg,
+                                  wgrad_cfg=wgrad_cfg)
+    return hbfp_matmul(x, w, cfg, key, w_kind=w_kind, dgrad_cfg=dgrad_cfg,
+                       wgrad_cfg=wgrad_cfg)
 
 
 # ----------------------------------------------------------------------------
@@ -122,18 +152,40 @@ def gelu_ffn(x, p, ctx):
 
 
 # ----------------------------------------------------------------------------
-# Quantization context — threads HBFPConfig + per-site PRNG keys through
-# model code without global state.
+# Quantization context — threads the resolved precision policy + per-site
+# PRNG keys through model code without global state.
 # ----------------------------------------------------------------------------
 
 class Ctx:
-    __slots__ = ("cfg", "key", "compute_dtype", "act_constraint", "shard_fn",
-                 "act_tap", "backend")
+    """Per-trace quantization context (DESIGN.md §11).
 
-    def __init__(self, cfg, key=None, compute_dtype=jnp.float32,
+    Carries one `precision.ResolvedPolicy` segment — the in-graph slice of
+    a `PrecisionPolicy` (global format, per-GEMM-role widths, backend) —
+    plus the PRNG key and launcher hooks. Legacy construction from a bare
+    HBFPConfig/None (`Ctx(cfg, ...)`) wraps it into a one-format segment,
+    so pre-policy call sites keep working unchanged.
+
+    Derived attributes (all pytree-static):
+      cfg      — the segment's global activation format (None ⇒ FP);
+      backend  — "sim" | "pallas" (DESIGN.md §10): "sim" routes matmuls
+                 through core.hbfp_ops, "pallas" through the fused-kernel
+                 custom-VJP path and the flash-attention kernel;
+      roles    — the policy's per-GEMM-role width table (ctx_matmul).
+    """
+
+    __slots__ = ("policy", "cfg", "key", "compute_dtype", "act_constraint",
+                 "shard_fn", "act_tap", "backend", "roles")
+
+    def __init__(self, cfg=None, key=None, compute_dtype=jnp.float32,
                  act_constraint=None, shard_fn=None, act_tap=False,
-                 backend="sim"):
-        self.cfg = cfg
+                 backend=None, policy=None):
+        if policy is None:
+            from repro.precision import as_segment
+            policy = as_segment(cfg, backend=backend or "sim")
+        self.policy = policy
+        self.cfg = policy.global_cfg
+        self.backend = backend or policy.backend
+        self.roles = policy.role_widths
         self.key = key
         self.compute_dtype = compute_dtype
         # optional fn(x)->x applying a sharding constraint to the residual
@@ -148,12 +200,6 @@ class Ctx:
         # activation fidelity stats for the residual stream as a metrics
         # aux output ("act_stats"); pure measurement, never changes values
         self.act_tap = act_tap
-        # dot-product execution backend (DESIGN.md §10): "sim" routes every
-        # matmul through core.hbfp_ops (quantize ops + XLA matmul); "pallas"
-        # routes 2-D weight matmuls through the fused-kernel custom-VJP path
-        # and full-causal attention through the flash kernel. Set from
-        # ArchConfig.kernel_backend by the train step.
-        self.backend = backend
 
     def shard(self, x, logical_axes):
         if self.shard_fn is None:
@@ -170,8 +216,10 @@ class Ctx:
     def fold(self, i) -> "Ctx":
         """Child context for layer i (i may be a traced int32)."""
         k = None if self.key is None else jax.random.fold_in(self.key, i)
-        return Ctx(self.cfg, k, self.compute_dtype, self.act_constraint,
-                   self.shard_fn, self.act_tap, self.backend)
+        return Ctx(key=k, compute_dtype=self.compute_dtype,
+                   act_constraint=self.act_constraint,
+                   shard_fn=self.shard_fn, act_tap=self.act_tap,
+                   policy=self.policy)
 
 
 def init_linear(key, d_in, d_out, scale=None, dtype=jnp.float32):

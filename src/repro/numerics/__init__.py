@@ -11,9 +11,12 @@ training; this package makes that observable at runtime and acts on it:
   * `controller` — hysteresis-based per-layer precision controller mapping
                    measured stats to PrecisionSchedule-compatible overrides,
                    with a replayable decision log (checkpoint meta);
-  * `adaptive`   — the closed loop: an instrumented train step that collects
-                   stats on cadence, feeds the controller, and swaps in a new
-                   jit variant when a decision changes per-layer widths.
+  * `adaptive`   — deprecated alias of the closed loop, which now lives in
+                   `train.make_step(policy, controller=..., tap=...)`
+                   (DESIGN.md §11): stats collected on cadence feed the
+                   controller, and each decision swaps in a new jit variant
+                   as a fresh resolved policy segment. Controller overrides
+                   may target a single GEMM role ("name@wgrad").
 """
 from repro.numerics.stats import (TensorStats, quantize_with_stats,
                                   stats_to_host, EXP_BINS, EXP_BIN_WIDTH,

@@ -1,35 +1,28 @@
 """The closed loop: telemetry-instrumented, controller-driven train step.
 
-`make_adaptive_train_step` is the adaptive sibling of
-`train.make_scheduled_train_step`, with the segment table *grown by the
-controller* instead of fixed up front:
+Since the PrecisionPolicy refactor (DESIGN.md §11) the loop lives in
+`train.make_step(policy, controller=...)`: variants are jit-compiled per
+(segment ⊕ controller-override state, telemetry-on/off) and cached, so the
+loop compiles O(#distinct decisions), not O(steps); on cadence steps the
+telemetry variant runs, its stats (plus the resolved per-role widths) land
+in the host ring buffer and feed the controller; decisions take effect at
+the next step as a new resolved segment. With `tap.cadence=None` every
+step is the plain variant — bit-identical to a constant policy
+(regression-tested).
 
-  * variants are jit-compiled per (override-state, telemetry-on/off) key and
-    cached — repeated states (including "no overrides") reuse their compiled
-    step, so the loop compiles O(#distinct decisions), not O(steps);
-  * on cadence steps the step runs the telemetry variant (weights/grads/acts
-    taps as a fixed-size aux output), converts stats to host floats into the
-    ring buffer, and feeds the controller;
-  * controller decisions take effect at the next step — each decision is a
-    segment boundary, exactly the per-segment machinery of DESIGN.md §8;
-  * with `tap.cadence=None` every step is the plain variant — bit-identical
-    to `make_train_step(arch, base_cfg, ...)` (regression-tested).
-
-Pair with `train.Trainer(..., controller=...)` to serialize the decision log
-into checkpoint meta so restarts replay identical decisions.
+`make_adaptive_train_step` below is the deprecated pre-policy alias, kept
+one release. Pair either entry point with `train.Trainer(...,
+controller=...)` to serialize the decision log into checkpoint meta so
+restarts replay identical decisions.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import ArchConfig
 from repro.core.formats import HBFPConfig
-from repro.numerics.collect import RingBuffer, TapConfig
-from repro.numerics.controller import PrecisionController, merge_sources
-from repro.numerics.stats import stats_to_host
+from repro.numerics.collect import TapConfig
+from repro.numerics.controller import PrecisionController
 
 
 def make_adaptive_train_step(arch: ArchConfig, base_cfg: HBFPConfig,
@@ -38,58 +31,17 @@ def make_adaptive_train_step(arch: ArchConfig, base_cfg: HBFPConfig,
                              tap: Optional[TapConfig] = None,
                              jit_compile: bool = True,
                              **kwargs):
-    """Adaptive train step: telemetry on cadence, controller in the loop.
-
-    Returns `train_step(state, batch, key) -> (state, metrics)` with
-    attributes `.controller`, `.buffer` (host ring buffer of raw snapshots),
-    `.tap`, and `.variants` (compiled-variant cache, exposed for tests).
-    `metrics` gains "n_overrides" (layers diverged from the base width) and
+    """Deprecated alias of `train.make_step(arch, base_cfg, schedule,
+    controller=..., tap=...)` (kept one release; DESIGN.md §11 migration
+    table). Same contract as before: returns `train_step(state, batch,
+    key) -> (state, metrics)` with attributes `.controller`, `.buffer`,
+    `.tap`, `.variants`; `metrics` gains "n_overrides" and
     "min_mantissa_bits". Extra kwargs forward to `make_train_step`.
     """
-    from repro.train.train_step import make_train_step
+    from repro.train.train_step import make_step
 
     if base_cfg is None:
         raise ValueError("adaptive precision needs a BFP base config; "
                          "fp32 has nothing to widen or narrow")
-    tap = tap if tap is not None else TapConfig()
-    buffer = RingBuffer(tap.history)
-    variants = {}
-
-    def variant(ovr_key, telemetry: bool):
-        fn = variants.get((ovr_key, telemetry))
-        if fn is None:
-            hbfp = controller.resolved(base_cfg) if ovr_key else base_cfg
-            fn = make_train_step(arch, hbfp, schedule,
-                                 taps=tap if telemetry else None, **kwargs)
-            if jit_compile:
-                fn = jax.jit(fn)
-            variants[(ovr_key, telemetry)] = fn
-        return fn
-
-    def train_step(state, batch, key):
-        # host dispatch on the step counter, like the scheduled path; the
-        # controller's override state names the current adaptive segment
-        step = int(state.step)
-        collect = tap.collect_at(step)
-        ovr = controller.overrides()
-        state, metrics = variant(ovr, collect)(state, batch, key)
-        metrics = dict(metrics)
-        if collect:
-            # absent when every tap is disabled for this step shape (e.g.
-            # acts-only taps under grad accumulation) — nothing to observe
-            numerics = metrics.pop("numerics", None)
-            if numerics is not None:
-                snapshot = stats_to_host(numerics)
-                buffer.append(step, snapshot)
-                controller.observe(step, merge_sources(snapshot))
-        widths = [w for _, w in ovr] + [controller.base_bits]
-        metrics["n_overrides"] = jnp.asarray(float(len(ovr)), jnp.float32)
-        metrics["min_mantissa_bits"] = jnp.asarray(float(min(widths)),
-                                                   jnp.float32)
-        return state, metrics
-
-    train_step.controller = controller
-    train_step.buffer = buffer
-    train_step.tap = tap
-    train_step.variants = variants
-    return train_step
+    return make_step(arch, base_cfg, schedule, controller=controller,
+                     tap=tap, jit_compile=jit_compile, **kwargs)

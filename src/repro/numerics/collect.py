@@ -58,13 +58,14 @@ class TapConfig:
         return self.cadence is not None and step % self.cadence == 0
 
 
-def _walk_hbfp_weights(tree, cfg):
+def _walk_hbfp_weights(tree, cfg, role: str = "fwd"):
     """Yield (name, leaf, concrete HBFPConfig) for every BFP-eligible weight
-    (same name semantics as opt_shell)."""
+    (same name semantics as opt_shell; `role` selects the GEMM-role width
+    when `cfg` is a precision policy segment, DESIGN.md §11)."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in flat:
         name = param_path_name(path)
-        c = resolve_param_cfg(cfg, name)
+        c = resolve_param_cfg(cfg, name, role)
         if c is None or not is_hbfp_weight(name, leaf):
             continue
         yield name, leaf, c
@@ -110,13 +111,17 @@ def weight_stats(params, cfg) -> Dict[str, TensorStats]:
 
 def grad_stats(grads, cfg) -> Dict[str, TensorStats]:
     """Fidelity of quantizing each weight gradient at its parameter's
-    resolved width (nearest rounding; measurement only — the optimizer sees
-    the unmodified gradients). Low SQNR / high FTZ here means the layer's
-    gradient signal does not survive the current mantissa width."""
+    resolved *wgrad* width (nearest rounding; measurement only — the
+    optimizer sees the unmodified gradients). With a per-role policy
+    ("wgrad+2") this is where the wider backward width becomes observable;
+    for uniform specs the wgrad width IS the parameter width, unchanged.
+    Low SQNR / high FTZ here means the layer's gradient signal does not
+    survive the current mantissa width."""
     return {name: quantize_with_stats(
                 leaf, c.mantissa_bits,
                 bfp.weight_tile_shape(leaf.ndim, c.tile))[1]
-            for name, leaf, c in _walk_hbfp_weights(grads, cfg)}
+            for name, leaf, c in _walk_hbfp_weights(grads, cfg,
+                                                    role="wgrad")}
 
 
 class RingBuffer:

@@ -26,12 +26,14 @@ Stability (the hysteresis contract, tested in tests/test_numerics.py):
     Together these guarantee a stationary distribution produces at most one
     direction change per layer before the width pins — no oscillation.
 
-Decisions are emitted as `PrecisionSchedule`-compatible per-layer overrides
-(`overrides()` / `resolved()`), so the train loop reuses PR 1's per-segment
-jit-variant machinery: each decision starts a new "segment" and the host
-dispatcher (`numerics.adaptive`) swaps compiled variants. The full decision
-log and controller state serialize into checkpoint meta (`to_meta` /
-`load_meta`), making restarts replay-identical.
+Decisions are emitted as per-layer (name, width) overrides (`overrides()`
+/ `resolved()`), consumed by `train.make_step`: each decision merges into
+the current policy segment (`ResolvedPolicy.with_controller`, exact-name
+match) and starts a new "segment", so the host dispatcher swaps compiled
+variants — PR 1's per-segment jit machinery (DESIGN.md §8/§11). Names may
+be role-qualified ("layer@wgrad") to pin a single GEMM role of one layer.
+The full decision log and controller state serialize into checkpoint meta
+(`to_meta` / `load_meta`), making restarts replay-identical.
 """
 from __future__ import annotations
 

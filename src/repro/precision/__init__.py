@@ -1,0 +1,37 @@
+"""Site-addressed precision API (DESIGN.md §11).
+
+One frozen `PrecisionPolicy` composes the static HBFP format, the step
+schedule, per-layer overrides, controller deltas, per-GEMM-role widths,
+and the kernel backend, and resolves every quantization decision through
+
+    policy.resolve(QuantSite(layer_path, gemm_role, operand_kind))
+        -> ResolvedQuant(cfg, backend, source)
+
+`train.make_step(arch, policy, lr_schedule)` is the matching train-loop
+entry point. The public surface below is snapshotted by
+tools/check_api.py (CI `api-surface` job) — extend `__all__` and refresh
+the snapshot (`python tools/check_api.py --update`) when it changes
+deliberately.
+"""
+from repro.precision.policy import (BACKENDS, OverrideValue,
+                                    PrecisionPolicy, ResolvedPolicy,
+                                    ResolvedQuant, RoleWidth, as_policy,
+                                    as_segment, parse_policy,
+                                    role_width_for)
+from repro.precision.sites import GEMM_ROLES, OPERAND_KINDS, QuantSite
+
+__all__ = [
+    "BACKENDS",
+    "GEMM_ROLES",
+    "OPERAND_KINDS",
+    "OverrideValue",
+    "PrecisionPolicy",
+    "QuantSite",
+    "ResolvedPolicy",
+    "ResolvedQuant",
+    "RoleWidth",
+    "as_policy",
+    "as_segment",
+    "parse_policy",
+    "role_width_for",
+]

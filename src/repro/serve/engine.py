@@ -23,10 +23,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.formats import HBFPConfig
 from repro.models import decode_step, make_cache, prefill
-from repro.models.layers import Ctx
-from repro.train.serve_step import _serve_cfg, narrow_serving_params
+from repro.train.serve_step import (_serve_cfg, _serve_ctx,
+                                    narrow_serving_params)
 
 
 @dataclasses.dataclass
@@ -38,7 +37,7 @@ class _Req:
 
 
 class ServeEngine:
-    def __init__(self, arch: ArchConfig, params, hbfp: Optional[HBFPConfig],
+    def __init__(self, arch: ArchConfig, params, hbfp,
                  *, max_batch: int = 8, ctx_len: int = 512,
                  eos_id: Optional[int] = None, greedy: bool = True,
                  seed: int = 0):
@@ -50,7 +49,8 @@ class ServeEngine:
         self.eos_id = eos_id
         self.greedy = greedy
         self._key = jax.random.key(seed)
-        self._ctx = Ctx(self.hbfp, None, jnp.dtype(arch.dtype))
+        # the policy's in-graph slice (role widths + backend included)
+        self._ctx = _serve_ctx(arch, hbfp)(None)
         self.cache = make_cache(self.params, arch, max_batch, ctx_len)
         self.slots: List[Optional[_Req]] = [None] * max_batch
         # overload queue: (rid, prompt, max_new_tokens), drained in step()

@@ -1,5 +1,13 @@
-"""Train/serve steps and the fault-tolerant Trainer loop."""
+"""Train/serve steps and the fault-tolerant Trainer loop.
+
+`make_step(arch, policy, lr_schedule)` is the unified entry point
+(DESIGN.md §11): one `PrecisionPolicy` drives format, schedule, per-layer
+and per-GEMM-role widths, the adaptive controller, and the kernel
+backend. `make_train_step` (one static segment) and
+`make_scheduled_train_step` (deprecated alias of `make_step`) remain for
+the pre-policy surface.
+"""
 from repro.train.train_step import (TrainState, init_train_state,
-                                    make_train_step,
-                                    make_scheduled_train_step)
+                                    make_scheduled_train_step, make_step,
+                                    make_train_step)
 from repro.train.serve_step import make_decode_fn, make_prefill_fn

@@ -2,56 +2,77 @@
 (one token, batched). The decode weights are the *narrow* BFP copy — the
 paper's inference-density win (8-bit mantissa weights) falls out of the same
 opt-shell machinery.
+
+Precision spec: every entry point takes None, an HBFPConfig, or a
+`precision.PrecisionPolicy` / `precision.ResolvedPolicy` — policies serve
+at their step-0 segment (per-layer overrides honored by the load-time
+narrowing, backend honored by the serving Ctx; DESIGN.md §11).
 """
 from __future__ import annotations
-
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.formats import HBFPConfig
 from repro.core.opt_shell import narrow_params
 from repro.models.layers import Ctx
 from repro.models.transformer import decode_step, make_cache, prefill
+from repro.precision.policy import (PrecisionPolicy, ResolvedPolicy,
+                                    as_segment)
+
+
+def _serve_seg(hbfp) -> ResolvedPolicy:
+    """Coerce any serving precision spec to its (step-0) segment."""
+    if isinstance(hbfp, PrecisionPolicy):
+        return hbfp.resolve_segment(0)
+    return as_segment(hbfp)
 
 
 def _serve_cfg(hbfp):
     """Serving weights are narrowed once at load time
     (narrow_serving_params); skip per-step re-quantization (idempotent)."""
-    return None if hbfp is None else hbfp.with_(requantize_weights=False)
+    cfg = _serve_seg(hbfp).global_cfg
+    return None if cfg is None else cfg.with_(requantize_weights=False)
 
 
-def make_prefill_fn(arch: ArchConfig, hbfp: Optional[HBFPConfig]):
+def _serve_ctx(arch: ArchConfig, hbfp):
+    """Build the serving Ctx factory: the policy's in-graph slice with the
+    load-time-narrowed weight contract (requantize_weights=False)."""
+    seg = _serve_seg(hbfp)
+    exec_seg = ResolvedPolicy(global_cfg=_serve_cfg(hbfp),
+                              role_widths=seg.role_widths,
+                              backend=seg.backend)
     compute_dtype = jnp.dtype(arch.dtype)
-    hbfp = _serve_cfg(hbfp)
+    return lambda key: Ctx(key=key, compute_dtype=compute_dtype,
+                           policy=exec_seg)
+
+
+def make_prefill_fn(arch: ArchConfig, hbfp):
+    ctx_for = _serve_ctx(arch, hbfp)
 
     def prefill_fn(params, batch, key=None):
-        ctx = Ctx(hbfp, key, compute_dtype)
-        return prefill(params, batch, arch, ctx)
+        return prefill(params, batch, arch, ctx_for(key))
 
     return prefill_fn
 
 
-def make_decode_fn(arch: ArchConfig, hbfp: Optional[HBFPConfig]):
+def make_decode_fn(arch: ArchConfig, hbfp):
     """decode_fn(params, batch, cache) -> (logits, cache). `params` must be
     the narrow serving copy (narrow_serving_params)."""
-    compute_dtype = jnp.dtype(arch.dtype)
-    hbfp = _serve_cfg(hbfp)
+    ctx_for = _serve_ctx(arch, hbfp)
 
     def decode_fn(params, batch, cache, key=None):
-        ctx = Ctx(hbfp, key, compute_dtype)
-        return decode_step(params, batch, cache, arch, ctx)
+        return decode_step(params, batch, cache, arch, ctx_for(key))
 
     return decode_fn
 
 
-def narrow_serving_params(params, arch: ArchConfig,
-                          hbfp: Optional[HBFPConfig]):
-    """One-time weight narrowing + cast for serving."""
+def narrow_serving_params(params, arch: ArchConfig, hbfp):
+    """One-time weight narrowing + cast for serving (per-layer policy
+    overrides resolve here, exactly like the train-time shell)."""
     compute_dtype = jnp.dtype(arch.dtype)
-    p = narrow_params(params, hbfp)
+    seg = _serve_seg(hbfp)
+    p = narrow_params(params, None if seg.is_fp32 else seg)
     return jax.tree.map(
         lambda x: x.astype(compute_dtype) if x.ndim >= 2 else x, p)
 

@@ -17,13 +17,17 @@ Distribution notes (beyond-paper, DESIGN.md §2):
   * optional BFP-compressed gradient all-reduce (grad_compress.py) for the
     shard_map DP path.
 
-Precision schedules (DESIGN.md §8): `make_train_step` builds ONE compiled
-step for ONE static precision state; `make_scheduled_train_step` wraps it
-into a host-side dispatcher that compiles one variant per schedule segment.
+Precision (DESIGN.md §11): `make_step(arch, policy, lr_schedule)` is THE
+entry point — it coerces any precision spec into a `PrecisionPolicy`,
+compiles one jit variant per *distinct* resolved segment, dispatches on
+the host step counter, and (optionally) closes the adaptive loop when a
+`numerics.PrecisionController` is passed. `make_train_step` builds one
+compiled step for one static segment (`precision.ResolvedPolicy`) and is
+what `make_step` calls per segment; `make_scheduled_train_step` is the
+deprecated pre-policy alias of `make_step`.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -31,10 +35,12 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.opt_shell import hbfp_apply_updates, narrow_params
-from repro.core.schedule_precision import ResolvedPrecision, as_schedule
+from repro.core.schedule_precision import as_schedule
 from repro.models.layers import Ctx
 from repro.models.transformer import loss_fn
 from repro.optim.adamw import OptState, adamw_init, adamw_update
+from repro.precision.policy import (PrecisionPolicy, ResolvedPolicy,
+                                    as_policy, as_segment)
 
 
 class TrainState(NamedTuple):
@@ -60,10 +66,13 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
                     taps=None):
     """Returns train_step(state, batch, key) -> (state, metrics).
 
-    hbfp: the precision for this compiled step — None (fp32), a static
-    HBFPConfig (the paper's setting), or a ResolvedPrecision (one schedule
-    segment with per-layer weight overrides; produced by
-    make_scheduled_train_step — all pytree-static under jit).
+    hbfp: the precision for this compiled step — a static
+    `precision.ResolvedPolicy` segment, or any legacy static state coerced
+    into one (None ⇒ fp32; HBFPConfig ⇒ the paper's uniform setting;
+    `schedule_precision.ResolvedPrecision` ⇒ per-layer weight overrides).
+    All pytree-static under jit; `make_step` builds one of these per
+    distinct policy segment. The backend comes from the segment (legacy
+    specs pick up `arch.kernel_backend`).
     fwd_constraint: optional fn(params_pytree) -> params_pytree applying
     with_sharding_constraint for the TP-only fwd copy (set by the launcher;
     identity on single device).
@@ -77,39 +86,49 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
     of per-parameter `TensorStats` for the weight narrowing and (optionally)
     gradient/activation fidelity (DESIGN.md §9). The main-path computation
     is bit-identical to taps=None (the weight tap reuses the same
-    quantization); cadence dispatch lives in `numerics.adaptive`.
+    quantization); cadence dispatch lives in `make_step`.
     """
     compute_dtype = jnp.dtype(arch.dtype)
-    backend = arch.kernel_backend
-    # `hbfp` may be a plain HBFPConfig (static, paper setting) or a
-    # ResolvedPrecision (one schedule segment, possibly with per-layer weight
-    # overrides). Split it into the in-graph activation config and the
+    seg = as_segment(hbfp, backend=arch.kernel_backend)
+    backend = seg.backend
+    # Split the segment into the in-graph activation config and the
     # weight-tree resolver; both are static under jit.
-    if isinstance(hbfp, ResolvedPrecision):
-        if hbfp.is_fp32:
-            hbfp = None
-    if isinstance(hbfp, ResolvedPrecision):
+    if seg.is_fp32:
+        act_cfg = param_cfg = None
+        stochastic = False
+    elif seg.has_overrides or seg.global_cfg is None:
         # per-layer weight widths (schedule overrides / numerics controller
         # decisions) are resolved by the shell's narrowing — the matmuls
         # (sim ops AND the fused kernels' quantize_w) must not re-quantize
         # at the segment's global width and crush a widened layer
-        act_cfg = None if hbfp.global_cfg is None else \
-            hbfp.global_cfg.with_(requantize_weights=False)
-        param_cfg = hbfp
-        stochastic = hbfp.any_stochastic
-    elif hbfp is not None:
+        act_cfg = None if seg.global_cfg is None else \
+            seg.global_cfg.with_(requantize_weights=False)
+        param_cfg = seg
+        stochastic = seg.any_stochastic
+    else:
         # uniform precision: weights are narrowed once per step by
         # narrow_params below, so per-matmul weight re-quantization is an
         # idempotent no-op. The sim path skips it to save quantize work;
         # the pallas path keeps it (quantize-in-VMEM is fused and free, and
         # integral mantissas are what unlock the int8 MXU path) —
         # DESIGN.md §10.
-        act_cfg = hbfp.with_(requantize_weights=(backend == "pallas"))
-        param_cfg = hbfp.with_(requantize_weights=False)
-        stochastic = hbfp.rounding == "stochastic"
-    else:
-        act_cfg = param_cfg = None
-        stochastic = False
+        act_cfg = seg.global_cfg.with_(
+            requantize_weights=(backend == "pallas"))
+        param_cfg = seg.global_cfg.with_(requantize_weights=False)
+        if seg.role_widths:
+            # keep the role table visible to resolve_param_cfg so the
+            # numerics grad tap measures at the wgrad width, not the fwd
+            # width (weight narrowing itself resolves role "fwd" — values
+            # bit-identical to the bare-config path)
+            param_cfg = ResolvedPolicy(global_cfg=param_cfg,
+                                       role_widths=seg.role_widths,
+                                       backend=backend)
+        stochastic = seg.global_cfg.rounding == "stochastic"
+
+    # the execution segment the model graph sees: the activation config
+    # plus the policy's per-GEMM-role widths and backend (ctx_matmul)
+    exec_seg = ResolvedPolicy(global_cfg=act_cfg,
+                              role_widths=seg.role_widths, backend=backend)
 
     if taps is not None and param_cfg is None:
         taps = None  # true fp32 step: nothing to measure (per-layer-only
@@ -128,8 +147,9 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
         and act_cfg is not None
 
     def loss_at(narrow, batch, key):
-        ctx = Ctx(act_cfg, key, compute_dtype, act_constraint, shard_fn,
-                  act_tap=act_tap, backend=backend)
+        ctx = Ctx(key=key, compute_dtype=compute_dtype,
+                  act_constraint=act_constraint, shard_fn=shard_fn,
+                  act_tap=act_tap, policy=exec_seg)
         return loss_fn(narrow, batch, arch, ctx)
 
     def train_step(state: TrainState, batch, key):
@@ -196,51 +216,143 @@ def make_train_step(arch: ArchConfig, hbfp, schedule, *, grad_accum: int = 1,
     return train_step
 
 
+def _tap_widths(seg: ResolvedPolicy, snapshot: dict) -> dict:
+    """Resolved mantissa widths for every tapped tensor — pure host
+    metadata attached to telemetry snapshots so per-role policies are
+    *observable* in the numerics taps: the weight tap quantizes at the fwd
+    width, the gradient tap at the wgrad width (0 ⇒ FP)."""
+    out = {}
+    for source, role in (("weights", "fwd"), ("grads", "wgrad")):
+        if source not in snapshot:
+            continue
+        widths = {}
+        for name in snapshot[source]:
+            c = seg.for_param(name, role)
+            widths[name] = 0 if c is None else c.mantissa_bits
+        out[source] = widths
+    return out
+
+
+def make_step(arch: ArchConfig, policy, schedule, *,
+              controller=None, tap=None,
+              jit_compile: bool = True, donate: bool = False, **kwargs):
+    """THE train-step entry point (DESIGN.md §11): one `PrecisionPolicy`
+    drives format, schedule, per-layer/per-role widths, controller loop,
+    and kernel backend.
+
+    Returns `train_step(state, batch, key) -> (state, metrics)` — a *host*
+    dispatcher over compiled variants:
+
+      * `policy` may be a PrecisionPolicy, a policy spec string, a
+        PrecisionSchedule, an HBFPConfig, or None (all coerced via
+        `precision.as_policy`; legacy specs pick up `arch.kernel_backend`).
+      * one jit variant is compiled per *distinct* resolved segment
+        (`ResolvedPolicy` hashes by value, so equal segments share a
+        compile); a constant policy is bit-identical to the pre-policy
+        static path (regression-tested) and keeps JAX's async dispatch
+        (no host sync on the step counter).
+      * `tap` (a `numerics.TapConfig`) enables telemetry on its cadence:
+        collection steps run the instrumented variant and `metrics` gains
+        the "numerics" stats pytree.
+      * `controller` (a `numerics.PrecisionController`) closes the loop:
+        telemetry snapshots (plus their resolved widths) land in
+        `.buffer`, feed `controller.observe`, and the controller's
+        override state merges into the segment for the *next* step —
+        variants are cached per (segment ⊕ overrides, telemetry), so the
+        loop compiles O(#distinct decisions), not O(steps).
+
+    `metrics` gains "mantissa_bits" (the segment's global width, 0 for
+    FP32) and — with a controller — "n_overrides" / "min_mantissa_bits".
+    Attributes on the returned fn: `.policy`, `.variants`, `.controller`,
+    `.buffer`, `.tap`. Extra kwargs forward to `make_train_step`.
+    """
+    pol = as_policy(policy, backend=arch.kernel_backend)
+    buffer = None
+    if controller is not None:
+        from repro.numerics.collect import RingBuffer, TapConfig
+        if pol.format(0) is None:
+            raise ValueError("adaptive precision needs a BFP base format; "
+                             "fp32 has nothing to widen or narrow")
+        tap = tap if tap is not None else TapConfig()
+        buffer = RingBuffer(tap.history)
+
+    variants = {}
+    segments = {}
+
+    def segment(i: int) -> ResolvedPolicy:
+        seg = segments.get(i)
+        if seg is None:
+            seg = segments[i] = pol.resolve_segment(i)
+        return seg
+
+    def variant(seg: ResolvedPolicy, telemetry: bool):
+        fn = variants.get((seg, telemetry))
+        if fn is None:
+            fn = make_train_step(arch, seg, schedule,
+                                 taps=tap if telemetry else None, **kwargs)
+            if jit_compile:
+                fn = jax.jit(fn, donate_argnums=(0,) if donate else ())
+            variants[(seg, telemetry)] = fn
+        return fn
+
+    # int(state.step) blocks on the previous step's output (a host sync
+    # per step) — skip it entirely when nothing dispatches on the step
+    single = pol.num_segments == 1 and controller is None \
+        and (tap is None or tap.cadence is None)
+
+    def train_step(state: TrainState, batch, key):
+        if single:
+            step, seg, telemetry = None, segment(0), False
+        else:
+            step = int(state.step)
+            seg = segment(pol.segment_index(step))
+            telemetry = tap is not None and tap.collect_at(step)
+        if controller is not None:
+            # the controller's override state names the current adaptive
+            # "segment"; decisions take effect at the next step
+            seg = seg.with_controller(controller.overrides())
+        state, metrics = variant(seg, telemetry)(state, batch, key)
+        metrics = dict(metrics)
+        if telemetry and controller is not None:
+            from repro.numerics.controller import merge_sources
+            from repro.numerics.stats import stats_to_host
+            # absent when every tap is disabled for this step shape (e.g.
+            # acts-only taps under grad accumulation) — nothing to observe
+            numerics = metrics.pop("numerics", None)
+            if numerics is not None:
+                snapshot = stats_to_host(numerics)
+                snapshot["widths"] = _tap_widths(seg, snapshot)
+                buffer.append(step, snapshot)
+                controller.observe(step, merge_sources(snapshot))
+        gcfg = seg.global_cfg
+        metrics["mantissa_bits"] = jnp.asarray(
+            0 if gcfg is None else gcfg.mantissa_bits, jnp.float32)
+        if controller is not None:
+            ovr = controller.overrides()
+            widths = [w for _, w in ovr] + [controller.base_bits]
+            metrics["n_overrides"] = jnp.asarray(float(len(ovr)),
+                                                 jnp.float32)
+            metrics["min_mantissa_bits"] = jnp.asarray(float(min(widths)),
+                                                       jnp.float32)
+        return state, metrics
+
+    train_step.policy = pol
+    train_step.variants = variants  # exposed for tests / compile accounting
+    train_step.controller = controller
+    train_step.buffer = buffer
+    train_step.tap = tap
+    return train_step
+
+
 def make_scheduled_train_step(arch: ArchConfig, precision, schedule, *,
                               jit_compile: bool = True, donate: bool = False,
                               **kwargs):
-    """Train step driven by a `PrecisionSchedule` (DESIGN.md §8).
-
-    Returns `train_step(state, batch, key) -> (state, metrics)` — a *host*
-    dispatcher: the schedule is a finite table, so each segment gets its own
-    jit-compiled variant (built lazily, at most `num_segments` compilations)
-    and the current variant is picked from the host value of `state.step`.
-    Inside every compiled step the HBFPConfig stays pytree-static, exactly
-    like the static path; with a constant schedule the computation is
-    bit-identical to `make_train_step(arch, cfg, ...)` (regression-tested).
-
-    `precision` may be a PrecisionSchedule, an HBFPConfig, or None (the
-    latter two are coerced to a one-segment schedule). `metrics` gains a
-    "mantissa_bits" entry (0 for FP32 segments). Extra kwargs are forwarded
-    to `make_train_step`.
-    """
-    psched = as_schedule(precision)
-    variants = {}
-
-    def variant(i: int):
-        fn = variants.get(i)
-        if fn is None:
-            fn = make_train_step(arch, psched.resolve_segment(i), schedule,
-                                 **kwargs)
-            if jit_compile:
-                fn = jax.jit(fn, donate_argnums=(0,) if donate else ())
-            variants[i] = fn
-        return fn
-
-    single = psched.num_segments == 1
-
-    def train_step(state: TrainState, batch, key):
-        # int(state.step) blocks on the previous step's output (a host sync
-        # per step) — skip the lookup entirely for one-segment schedules so
-        # the constant path keeps JAX's async dispatch.
-        i = 0 if single else psched.segment_index(int(state.step))
-        cfg = psched.segments[i][1]
-        state, metrics = variant(i)(state, batch, key)
-        metrics = dict(metrics)
-        metrics["mantissa_bits"] = jnp.asarray(
-            0 if cfg is None else cfg.mantissa_bits, jnp.float32)
-        return state, metrics
-
-    train_step.schedule = psched
-    train_step.variants = variants  # exposed for tests / compile accounting
-    return train_step
+    """Deprecated alias of `make_step` (kept one release; DESIGN.md §11
+    migration table). `precision` may be a PrecisionSchedule, HBFPConfig,
+    or None — exactly the pre-policy surface; behaviour (including the
+    "mantissa_bits" metric and per-segment compilation) is unchanged."""
+    fn = make_step(arch, precision, schedule, jit_compile=jit_compile,
+                   donate=donate, **kwargs)
+    if not isinstance(precision, PrecisionPolicy):
+        fn.schedule = as_schedule(precision)  # legacy attribute, kept
+    return fn

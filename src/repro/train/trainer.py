@@ -12,16 +12,17 @@ Behaviours (exercised by tests/test_trainer.py):
   * straggler note: steps are synchronous SPMD — mitigation at this layer is
     restart-based (checkpoint elasticity) plus the data pipeline's
     statelessness; see README §fault-tolerance;
-  * precision schedules: `hbfp` may be a static HBFPConfig or a
-    PrecisionSchedule (pair with train_step.make_scheduled_train_step — the
-    step fn dispatches on state.step, so resume lands in the right schedule
-    segment automatically); the spec is stored in checkpoint meta and
-    packed checkpoints use the widths resolved at the checkpointed step;
+  * precision: `hbfp` may be a static HBFPConfig, a PrecisionSchedule, or
+    a `precision.PrecisionPolicy` (pair with train.make_step — the step fn
+    dispatches on state.step, so resume lands in the right policy segment
+    automatically); the spec is stored in checkpoint meta and packed
+    checkpoints use the per-layer widths resolved at the checkpointed step
+    (DESIGN.md §8/§11);
   * adaptive precision (DESIGN.md §9): pass `controller=` (a
-    `numerics.PrecisionController`, paired with
-    `numerics.make_adaptive_train_step`) — its full state incl. the decision
-    log is serialized into checkpoint meta ("numerics_controller") and
-    restored on resume, so a restarted run replays identical decisions.
+    `numerics.PrecisionController`, paired with `train.make_step(...,
+    controller=...)`) — its full state incl. the decision log is
+    serialized into checkpoint meta ("numerics_controller") and restored
+    on resume, so a restarted run replays identical decisions.
 """
 from __future__ import annotations
 

@@ -29,6 +29,16 @@ def test_module_docstrings_present():
     assert r.returncode == 0, r.stdout + r.stderr
 
 
+def test_api_surface_matches_snapshot():
+    """The repro.precision public surface matches tools/api_surface.json
+    (the CI `api-surface` job runs the same check via tools/check_api.py);
+    deliberate changes are recorded with `check_api.py --update`."""
+    r = subprocess.run([sys.executable,
+                        os.path.join(ROOT, "tools", "check_api.py")],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
 def test_design_sections_cited_by_source_exist():
     """Every `DESIGN.md §N` cited anywhere in src/benchmarks/examples must
     be a real section heading — no more phantom design-doc references."""

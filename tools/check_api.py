@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Public-API surface guard for `repro.precision` (DESIGN.md §11).
+
+The precision policy is the repo's one coordination point for "which BFP,
+where, when" — examples, benchmarks, configs, and the train loop all
+program against it, so accidental signature drift is a repo-wide break.
+This tool snapshots the package's public surface (`__all__` membership,
+function signatures, dataclass fields, public method signatures, module
+constants) into tools/api_surface.json and fails when the live source no
+longer matches — unreviewed drift fails the CI `api-surface` job (and the
+docs lane, alongside check_docstrings / check_doc_links).
+
+The surface is extracted *statically* with `ast`, so the check needs no
+jax/numpy install (the docs lane is dependency-free). Deliberate API
+changes are recorded with:
+
+    python tools/check_api.py --update
+"""
+import ast
+import difflib
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PKG = os.path.join(ROOT, "src", "repro", "precision")
+SNAPSHOT = os.path.join(ROOT, "tools", "api_surface.json")
+
+
+def _sig(fn) -> str:
+    s = "(" + ast.unparse(fn.args) + ")"
+    if fn.returns is not None:
+        s += " -> " + ast.unparse(fn.returns)
+    return s
+
+
+def _class_surface(c: ast.ClassDef) -> dict:
+    entry = {"kind": "class", "fields": {}, "methods": {}}
+    for node in c.body:
+        if isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name):
+            entry["fields"][node.target.id] = {
+                "type": ast.unparse(node.annotation),
+                "default": None if node.value is None
+                else ast.unparse(node.value)}
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and not node.name.startswith("_"):
+            entry["methods"][node.name] = _sig(node)
+    return entry
+
+
+def _module_defs(path: str) -> dict:
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    defs = {}
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            defs[node.name] = _class_surface(node)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[node.name] = {"kind": "function", "signature": _sig(node)}
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            defs[node.targets[0].id] = {"kind": "constant",
+                                        "value": ast.unparse(node.value)}
+    return defs
+
+
+def _public_all() -> list:
+    with open(os.path.join(PKG, "__init__.py")) as f:
+        tree = ast.parse(f.read())
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == "__all__":
+            return list(ast.literal_eval(node.value))
+    raise SystemExit(f"{PKG}/__init__.py: no literal __all__ found")
+
+
+def surface() -> dict:
+    defs = {}
+    for fname in sorted(os.listdir(PKG)):
+        if fname.endswith(".py") and fname != "__init__.py":
+            defs.update(_module_defs(os.path.join(PKG, fname)))
+    names = _public_all()
+    missing = [n for n in names if n not in defs]
+    if missing:
+        raise SystemExit(f"__all__ exports with no definition in "
+                         f"src/repro/precision/: {missing}")
+    return {"package": "repro.precision",
+            "__all__": names,
+            "api": {n: defs[n] for n in names}}
+
+
+def main(argv) -> int:
+    live = surface()
+    if "--update" in argv:
+        with open(SNAPSHOT, "w") as f:
+            json.dump(live, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"check_api: wrote {os.path.relpath(SNAPSHOT, ROOT)} "
+              f"({len(live['__all__'])} public names)")
+        return 0
+    if not os.path.exists(SNAPSHOT):
+        print(f"check_api: missing snapshot {SNAPSHOT}; run "
+              f"`python tools/check_api.py --update` and commit it")
+        return 1
+    with open(SNAPSHOT) as f:
+        want = json.load(f)
+    if live == want:
+        print(f"check_api: repro.precision surface matches snapshot "
+              f"({len(live['__all__'])} public names)")
+        return 0
+    a = json.dumps(want, indent=1, sort_keys=True).splitlines()
+    b = json.dumps(live, indent=1, sort_keys=True).splitlines()
+    print("check_api: PUBLIC API SURFACE DRIFT in repro.precision "
+          "(snapshot vs source):")
+    for line in difflib.unified_diff(a, b, "tools/api_surface.json",
+                                     "src/repro/precision/", lineterm="",
+                                     n=2):
+        print("  " + line)
+    print("check_api: if this change is deliberate, refresh with "
+          "`python tools/check_api.py --update` and have it reviewed")
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
