@@ -2,21 +2,19 @@
 paper's CIFAR/PTB workloads (CPU container; reduced scale, same phenomena)."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import time_fn
+
 
 def timer(fn, *args, n=10, warmup=2):
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(n):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / n * 1e6  # us
+    """Amortized mean µs/call: the shared `obs.trace.time_fn` loop with
+    one trailing sync (keeps JAX async dispatch pipelined across the n
+    calls — the step-benchmark semantics)."""
+    return time_fn(fn, *args, n=n, warmup=warmup,
+                   sync=jax.block_until_ready)
 
 
 def synth_images(key, n, hw=8, c=3, classes=10, template_seed=1234):

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 
@@ -24,6 +23,7 @@ from repro.core import HBFPConfig
 from repro.data import SyntheticLM
 from repro.models import init_params
 from repro.numerics import TapConfig
+from repro.obs.trace import time_fn
 from repro.optim import make_schedule
 from repro.train import init_train_state, make_train_step
 
@@ -45,20 +45,21 @@ def run(log=print):
            "telemetry": jax.jit(make_train_step(arch, base, lrs,
                                                 taps=TapConfig()))}
 
-    def once(fn):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(state, batch, key)[0].params)
-        return (time.perf_counter() - t0) * 1e6
+    def round_min(fn, warmup=0):
+        # min-of-3, each call synced — the shared obs.trace timing loop
+        return time_fn(fn, state, batch, key, n=3, warmup=warmup,
+                       sync=jax.block_until_ready, reduce="min",
+                       sync_each=True)
 
     for fn in fns.values():  # compile + warm
-        once(fn), once(fn)
+        round_min(fn, warmup=2)
     # interleaved min-of-rounds: robust to CPU contention in shared
     # containers (both variants see the same background load; the min
     # approximates the uncontended step)
     best = {k: float("inf") for k in fns}
     for _ in range(16):
         for k, fn in fns.items():
-            best[k] = min(best[k], min(once(fn) for _ in range(3)))
+            best[k] = min(best[k], round_min(fn))
     us_plain = best["plain"]
     us_tap = best["telemetry"]
     cad1 = us_tap / us_plain - 1.0

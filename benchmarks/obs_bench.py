@@ -1,0 +1,136 @@
+"""Observability-plane overhead benchmark (DESIGN.md §12).
+
+Times the instrumented train step with and without an attached
+`obs.Recorder` (JSONL run-log sink), at both step shapes the dispatcher
+produces: the off-cadence plain step (recorder cost = one span event per
+step) and the tap-cadence telemetry step (span + "numerics/snapshot"
+emission). Because emission is host-side and outside jit, the compiled
+computation is identical in all cells — this measures exactly the run-log
+tax. The amortized model at cadence C is exact, same as
+`numerics_bench`: (C-1 plain steps + 1 telemetry step) per C.
+
+Acceptance target (ISSUE 8): amortized overhead at the default tap
+cadence (100) below 1%.
+
+    PYTHONPATH=src python -m benchmarks.obs_bench [--smoke]
+
+--smoke (the CI lane): fewer timing rounds, run-log to a temp dir,
+nothing written to the repo root — exists to fail fast when the obs plane
+regresses the step path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import jax
+
+from repro.configs import get_arch
+from repro.core import HBFPConfig
+from repro.data import SyntheticLM
+from repro.models import init_params
+from repro.numerics import TapConfig
+from repro.obs import JSONLSink, Recorder
+from repro.obs.trace import time_fn
+from repro.optim import make_schedule
+from repro.train import init_train_state, make_step
+
+_OUT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_obs.json")
+
+CADENCE = 100
+
+
+def run(log=print, smoke: bool = False):
+    arch = get_arch("yi-9b").smoke()
+    pipe = SyntheticLM(arch.vocab_size, 33, 8, seed=0)
+    lrs = make_schedule("constant", base_lr=1e-3, warmup_steps=2,
+                        total_steps=100)
+    base = HBFPConfig(8, 16)
+    batch = pipe.batch(0)
+    key = jax.random.key(1)
+
+    tmp = tempfile.mkdtemp(prefix="obs_bench_")
+    rec = Recorder([JSONLSink(os.path.join(tmp, "runlog.jsonl"))],
+                   sync=jax.block_until_ready)
+    recs = {"off": None, "on": rec}
+    fns = {k: make_step(arch, base, lrs, tap=TapConfig(cadence=CADENCE),
+                        recorder=r) for k, r in recs.items()}
+
+    # state at step 0 (tap cadence fires) and step 1 (plain variant)
+    state0 = init_train_state(jax.random.key(0), arch, init_params)
+    state1 = fns["off"](state0, batch, key)[0]
+
+    def cell(which, state):
+        fn, r = fns[which], recs[which]
+        if r is None:
+            def call():
+                return fn(state, batch, key)[0].params
+        else:
+            def call():
+                with r.span("train/step"):
+                    return fn(state, batch, key)[0].params
+        # min-of-3 per round, each call synced (shared obs.trace loop)
+        return lambda warmup=0: time_fn(
+            call, n=3, warmup=warmup, sync=jax.block_until_ready,
+            reduce="min", sync_each=True)
+
+    cells = {(w, s): cell(w, st) for w in ("off", "on")
+             for s, st in (("plain", state1), ("tap", state0))}
+    for f in cells.values():  # compile + warm every variant
+        f(warmup=2)
+    # interleaved min-of-rounds (numerics_bench rationale: both arms see
+    # the same background load; min approximates the uncontended step)
+    best = {k: float("inf") for k in cells}
+    for _ in range(4 if smoke else 16):
+        for k, f in cells.items():
+            best[k] = min(best[k], f())
+
+    amort = {w: ((CADENCE - 1) * best[(w, "plain")] + best[(w, "tap")])
+             / CADENCE for w in ("off", "on")}
+    over_plain = best[("on", "plain")] / best[("off", "plain")] - 1.0
+    over_tap = best[("on", "tap")] / best[("off", "tap")] - 1.0
+    over_amort = amort["on"] / amort["off"] - 1.0
+    log(f"plain step  recorder off: {best[('off', 'plain')]:9.0f} us")
+    log(f"plain step  recorder on : {best[('on', 'plain')]:9.0f} us  "
+        f"({over_plain * 100:+.2f}% — one span event/step)")
+    log(f"tap step    recorder off: {best[('off', 'tap')]:9.0f} us")
+    log(f"tap step    recorder on : {best[('on', 'tap')]:9.0f} us  "
+        f"({over_tap * 100:+.2f}% — span + numerics/snapshot)")
+    log(f"amortized overhead @ cadence {CADENCE}: {over_amort * 100:.3f}%  "
+        f"(target < 1%)")
+
+    if smoke:
+        log("smoke OK (no files written)")
+        return []
+
+    record = {"arch": arch.name + "-smoke",
+              "backend": jax.default_backend(),
+              "cadence": CADENCE,
+              "step_us": {f"{w}_{s}": round(best[(w, s)], 1)
+                          for w, s in best},
+              "overhead_plain_step": round(over_plain, 4),
+              "overhead_tap_step": round(over_tap, 4),
+              "overhead_amortized": round(over_amort, 5),
+              "sink": "jsonl",
+              "note": "recorder cost is host-side emission only (the "
+                      "compiled step is bit-identical either way, "
+                      "regression-tested); amortization at cadence C is "
+                      "exact because off-cadence steps run the unmodified "
+                      "variant"}
+    with open(_OUT, "w") as f:
+        json.dump(record, f, indent=1)
+    log(f"recorded -> {_OUT}")
+    return [("step_us_recorder_off", amort["off"], 0),
+            ("step_us_recorder_on", amort["on"], 0),
+            ("overhead_amortized_pct", over_amort * 100, 1)]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced rounds, no files written (CI lane)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

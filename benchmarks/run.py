@@ -14,7 +14,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (design_space, kernel_bench, numerics_bench,
-                            table1_narrow_fp, table2_image_cls,
+                            obs_bench, table1_narrow_fp, table2_image_cls,
                             table3_lstm_lm, throughput_model)
     suites = [
         ("table1_narrow_fp", table1_narrow_fp),
@@ -24,6 +24,7 @@ def main() -> None:
         ("throughput_model", throughput_model),
         ("kernel_bench", kernel_bench),
         ("numerics_overhead", numerics_bench),
+        ("obs_overhead", obs_bench),
     ]
     csv = ["name,value,derived"]
     for name, mod in suites:

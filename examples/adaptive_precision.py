@@ -18,10 +18,18 @@ width). The run writes results/numerics.json; render the per-layer table +
 decision log with:
 
     PYTHONPATH=src python -m repro.analysis.report --numerics results/numerics.json
+
+The adaptive run also streams a structured run-log (DESIGN.md §12) to
+results/runlog.jsonl — step spans, progress lines, every telemetry
+snapshot, the controller's widen decisions with their triggering signal,
+and checkpoint saves. Tail it (live with --watch) via:
+
+    PYTHONPATH=src python -m repro.analysis.report --follow results/runlog.jsonl
 """
 import argparse
 import json
 import os
+import shutil
 
 import jax
 
@@ -30,6 +38,7 @@ from repro.core import HBFPConfig
 from repro.data import SyntheticLM
 from repro.models import init_params
 from repro.numerics import ControllerConfig, PrecisionController, TapConfig
+from repro.obs import JSONLSink, Recorder
 from repro.optim import make_schedule
 from repro.precision import parse_policy
 from repro.train import init_train_state, make_step
@@ -43,6 +52,8 @@ def main():
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--cadence", type=int, default=5)
     ap.add_argument("--out", default="results/numerics.json")
+    ap.add_argument("--runlog", default="results/runlog.jsonl")
+    ap.add_argument("--ckpt", default="results/adaptive_ckpt")
     args = ap.parse_args()
 
     arch = get_arch("yi-9b").smoke()
@@ -64,17 +75,25 @@ def main():
     print(f"static  {base.name}: final loss {static_loss:.4f}")
 
     # -- adaptive run: same seeds, per-role policy, controller in loop ----
+    # structured run-log (DESIGN.md §12): every event the run produces —
+    # step spans, snapshots, widen decisions, checkpoint saves — lands in
+    # one JSONL stream `report.py --follow` can tail
+    os.makedirs(os.path.dirname(args.runlog) or ".", exist_ok=True)
+    rec = Recorder([JSONLSink(args.runlog, mode="w")])
+    shutil.rmtree(args.ckpt, ignore_errors=True)  # fresh run, no resume
     ctrl = PrecisionController(ControllerConfig(patience=1, cooldown=1),
                                base_bits=4)
     step_fn = make_step(arch, policy, lrs, controller=ctrl,
-                        tap=TapConfig(cadence=args.cadence))
+                        tap=TapConfig(cadence=args.cadence), recorder=rec)
     trainer = Trainer(train_step=step_fn,
                       init_state=init_train_state(jax.random.key(0), arch,
                                                   init_params),
-                      data_fn=pipe.batch, ckpt_dir=None, hbfp=policy,
-                      controller=ctrl, seed=0)
+                      data_fn=pipe.batch, ckpt_dir=args.ckpt,
+                      ckpt_every=max(args.steps // 2, 1), hbfp=policy,
+                      controller=ctrl, recorder=rec, seed=0)
     state, metrics = trainer.run(args.steps, log_every=10)
     adaptive_loss = float(metrics["loss"])
+    rec.close()
 
     widened = [d for d in ctrl.log if d["action"] == "widen"]
     clip_widened = [d for d in widened if d["reason"] == "clip>thr"]
@@ -114,6 +133,8 @@ def main():
         json.dump(dump, f, indent=1)
     print(f"wrote {args.out} (render: python -m repro.analysis.report "
           f"--numerics {args.out})")
+    print(f"wrote {args.runlog} (tail: python -m repro.analysis.report "
+          f"--follow {args.runlog})")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,16 @@
-"""Render dryrun.json into the EXPERIMENTS.md tables, and numerics-
-observatory dumps (DESIGN.md §9) into per-layer fidelity + decision tables.
+"""Render dryrun.json into the EXPERIMENTS.md tables, numerics-observatory
+dumps (DESIGN.md §9) into per-layer fidelity + decision tables, and tail a
+JSONL run-log live (DESIGN.md §12).
 
     PYTHONPATH=src python -m repro.analysis.report results/dryrun.json
     PYTHONPATH=src python -m repro.analysis.report --numerics results/numerics.json
+    PYTHONPATH=src python -m repro.analysis.report --follow results/runlog.jsonl
+
+`--follow` renders events as they arrive — progress lines, controller
+widen/narrow decisions with their triggering signal, the per-layer
+width/SQNR table on every numerics snapshot, checkpoint and serving
+events — and exits at end-of-file; add `--watch` to keep polling for new
+lines (live view of a running training job; Ctrl-C to stop).
 """
 import json
 import sys
@@ -117,7 +125,94 @@ def render_numerics(path):
     print(decision_table(ctrl.get("log", [])))
 
 
+def _follow_lines(path, watch=False, interval=0.5):
+    """Yield complete lines from `path`; at EOF either stop (default) or
+    poll for appended lines (`watch=True`). A partial trailing line (the
+    sink mid-write) is held until its newline arrives."""
+    import time as _time
+    buf = ""
+    with open(path) as f:
+        while True:
+            chunk = f.readline()
+            if chunk:
+                buf += chunk
+                if buf.endswith("\n"):
+                    yield buf
+                    buf = ""
+                continue
+            if not watch:
+                if buf:
+                    yield buf  # writer is gone; flush what we have
+                return
+            _time.sleep(interval)
+
+
+def follow_runlog(path, *, watch=False, interval=0.5, out=print):
+    """Tail a JSONL run-log (written by `obs.JSONLSink`) and render events
+    live. Unknown kinds and span events are counted but not printed (the
+    schema is open — see obs.events.KINDS); returns the per-kind counts."""
+    counts = {}
+    n_dec = 0
+    for line in _follow_lines(path, watch=watch, interval=interval):
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError:
+            continue  # torn write / rotation seam
+        kind = ev.get("kind")
+        data = ev.get("data", {})
+        step = ev.get("step")
+        counts[kind] = counts.get(kind, 0) + 1
+        if kind == "train/progress":
+            extras = " ".join(
+                f"{k} {v:.4f}" for k, v in data.items()
+                if isinstance(v, (int, float)) and k != "elapsed_s")
+            out(f"step {step:>6} {extras} ({data.get('elapsed_s', 0.):.1f}s)")
+        elif kind == "train/recompile":
+            out(f"[recompile] step {step}: m{data.get('mantissa_bits')} "
+                f"overrides={data.get('n_overrides', 0)} "
+                f"backend={data.get('backend')} "
+                f"variants={data.get('n_variants')}")
+        elif kind == "numerics/snapshot":
+            out(f"\n-- per-layer numerics @ step {step} --")
+            out(numerics_table(data))
+            out("")
+        elif kind == "precision/decision":
+            n_dec += 1
+            out(f"[{str(data.get('action', '?')).upper()}] step {step} "
+                f"{data.get('layer')}: m{data.get('from')} -> "
+                f"m{data.get('to')} ({data.get('reason')}, "
+                f"sqnr {data.get('sqnr_db', 0.):.1f} dB, "
+                f"clip {data.get('clip_frac', 0.):.3f})")
+        elif kind == "ckpt/save":
+            out(f"[ckpt] saved step {step}: "
+                f"{data.get('bytes', 0) / 2**20:.2f} MiB in "
+                f"{data.get('dur_s', 0.):.2f}s ({data.get('path')})")
+        elif kind == "ckpt/load":
+            out(f"[ckpt] restored step {step} "
+                f"({data.get('bytes', 0) / 2**20:.2f} MiB)")
+        elif kind == "autotune/winner":
+            out(f"[autotune] {data.get('key')}: tiles={data.get('tiles')} "
+                f"speedup {data.get('speedup')}x")
+        elif kind == "serve/complete":
+            out(f"[serve] rid {data.get('rid')}: {data.get('tokens')} tok, "
+                f"ttft {data.get('ttft_s', 0.) * 1e3:.1f} ms, "
+                f"{data.get('tok_per_s', 0.):.1f} tok/s")
+    total = sum(counts.values())
+    by_kind = " ".join(f"{k}:{counts[k]}" for k in sorted(counts))
+    out(f"\n{total} events ({by_kind}); {n_dec} precision decisions")
+    return counts
+
+
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--follow":
+        rest = sys.argv[2:]
+        paths = [a for a in rest if not a.startswith("--")]
+        try:
+            follow_runlog(paths[0] if paths else "results/runlog.jsonl",
+                          watch="--watch" in rest)
+        except KeyboardInterrupt:
+            pass
+        return
     if len(sys.argv) > 1 and sys.argv[1] == "--numerics":
         render_numerics(sys.argv[2] if len(sys.argv) > 2
                         else "results/numerics.json")

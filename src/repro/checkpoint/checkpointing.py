@@ -16,7 +16,11 @@ Design (DESIGN.md §6):
   * **async**: `save_checkpoint(..., background=True)` snapshots to host
     memory synchronously (cheap) and writes in a thread, overlapping I/O
     with the next training steps;
-  * retention: keep the last N checkpoints.
+  * retention: keep the last N checkpoints;
+  * **observable** (DESIGN.md §12): pass `recorder=` (an `obs.Recorder`)
+    and every save/load emits a `"ckpt/save"` / `"ckpt/load"` event with
+    duration and bytes on disk (background saves emit from the writer
+    thread — sinks serialize writes).
 """
 from __future__ import annotations
 
@@ -28,6 +32,8 @@ from typing import Any, Optional
 
 import jax
 import numpy as np
+
+from repro.obs import NULL_RECORDER
 
 from repro.core import bfp
 from repro.core.formats import HBFPConfig
@@ -65,14 +71,22 @@ def _flatten(tree):
     return out
 
 
+def _tree_bytes(d: str) -> int:
+    return sum(os.path.getsize(os.path.join(r, f))
+               for r, _, fs in os.walk(d) for f in fs)
+
+
 def save_checkpoint(ckpt_dir: str, step: int, state, *,
                     hbfp=None, packed: bool = False,
                     keep: int = 3, background: bool = False,
-                    extra_meta: Optional[dict] = None):
+                    extra_meta: Optional[dict] = None,
+                    recorder=None):
     """Write `state` (any pytree) at `step`. Returns the final path (or the
     Thread when background=True). `hbfp`: Optional[HBFPConfig |
     PrecisionSchedule] — serialized into meta and, with packed=True, used to
-    pack HBFP weights at this step's resolved widths."""
+    pack HBFP weights at this step's resolved widths. `recorder`: optional
+    `obs.Recorder` — emits one "ckpt/save" event per completed write."""
+    recorder = recorder if recorder is not None else NULL_RECORDER
     os.makedirs(ckpt_dir, exist_ok=True)
     # snapshot to host synchronously — cheap relative to the write
     host = {k: np.asarray(v) for k, v in _flatten(state).items()}
@@ -84,6 +98,7 @@ def save_checkpoint(ckpt_dir: str, step: int, state, *,
     resolved = _resolved_at(hbfp, int(step))
 
     def write():
+        t0 = recorder.clock.perf()
         tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
         final = os.path.join(ckpt_dir, f"step_{step:08d}")
         shutil.rmtree(tmp, ignore_errors=True)
@@ -112,6 +127,10 @@ def save_checkpoint(ckpt_dir: str, step: int, state, *,
         for s in steps[:-keep]:
             shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
                           ignore_errors=True)
+        recorder.emit("ckpt/save", step=int(step),
+                      dur_s=recorder.clock.perf() - t0,
+                      bytes=_tree_bytes(final), packed=bool(packed),
+                      background=bool(background), path=final)
         return final
 
     if background:
@@ -138,10 +157,13 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 
 
 def load_checkpoint(ckpt_dir: str, like, step: Optional[int] = None,
-                    shardings=None):
+                    shardings=None, recorder=None):
     """Restore into the structure of `like` (a pytree of arrays or
     ShapeDtypeStructs). `shardings`: optional matching pytree of
-    NamedShardings — leaves are device_put accordingly (any mesh)."""
+    NamedShardings — leaves are device_put accordingly (any mesh).
+    `recorder`: optional `obs.Recorder` — emits one "ckpt/load" event."""
+    recorder = recorder if recorder is not None else NULL_RECORDER
+    t0 = recorder.clock.perf()
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -175,5 +197,9 @@ def load_checkpoint(ckpt_dir: str, like, step: Optional[int] = None,
         nm = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
                        for k in path)
         vals.append(loaded[nm])
+    recorder.emit("ckpt/load", step=int(step),
+                  dur_s=recorder.clock.perf() - t0,
+                  bytes=_tree_bytes(d), packed=bool(meta.get("packed")),
+                  path=d)
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), vals), meta

@@ -24,8 +24,10 @@ from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Dict, Iterable, Optional, Tuple
+
+from repro.obs import NULL_RECORDER
+from repro.obs.trace import time_fn
 
 Tiles = Tuple[int, int, int]
 
@@ -153,33 +155,37 @@ def lookup(op: str, M: int, K: int, N: int, *, dtype: str = "float32",
 
 
 def _time_us(fn, n: int = 3, warmup: int = 1) -> float:
+    """Min-of-n microbenchmark of `fn()` — the shared `obs.trace.time_fn`
+    loop with the autotuner's historical semantics (sync each call,
+    reduce=min; robust to host contention)."""
     import jax
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    best = float("inf")
-    for _ in range(n):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, (time.perf_counter() - t0) * 1e6)
-    return best
+    return time_fn(fn, n=n, warmup=warmup, sync=jax.block_until_ready,
+                   reduce="min", sync_each=True)
 
 
 def autotune_op(op: str, run_fn, M: int, K: int, N: int, *,
                 dtype: str = "float32", mantissa_bits: int = 8,
                 table: Optional[TuningTable] = None,
                 menu: Tuple[int, ...] = TILE_MENU,
-                n: int = 3, save: bool = True, log=None):
+                n: int = 3, save: bool = True, log=None,
+                recorder=None):
     """Search tiles for one GEMM. `run_fn(tiles)` must execute the kernel
     once with those tiles (the harness times it, min-of-n). Records the
     winner into the table (and saves it) and returns (best_tiles, report)
     where report carries per-candidate timings plus the default-tiling
-    baseline for the speedup accounting."""
+    baseline for the speedup accounting. `recorder`: optional
+    `obs.Recorder` — emits "autotune/search" when the sweep starts and
+    "autotune/winner" with the chosen tiles + speedup."""
     import jax
+    rec = recorder if recorder is not None else NULL_RECORDER
     table = table or get_table()
     cands = candidates(M, K, N, menu=menu)
     default = clip_tiles(DEFAULT_TILES, M, K, N)
     if default not in cands:
         cands = (default,) + cands
+    key = cache_key(op, M, K, N, dtype, mantissa_bits)
+    rec.emit("autotune/search", op=op, key=key, shape=[M, K, N],
+             n_candidates=len(cands), n=n)
     timings = {}
     for t in cands:
         timings[t] = _time_us(lambda t=t: run_fn(t), n=n)
@@ -194,7 +200,8 @@ def autotune_op(op: str, run_fn, M: int, K: int, N: int, *,
         "backend": jax.default_backend(),
         "n_candidates": len(cands),
     }
-    table.put(cache_key(op, M, K, N, dtype, mantissa_bits), best,
+    rec.emit("autotune/winner", op=op, key=key, **report)
+    table.put(key, best,
               **{k: v for k, v in report.items() if k != "tiles"})
     if save:
         table.save()

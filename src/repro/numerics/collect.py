@@ -18,7 +18,11 @@ Collection runs on an every-N-steps cadence: the instrumented step
 (`numerics.adaptive`) compiles one telemetry variant and one plain variant
 and dispatches on the host step counter, so off-cadence steps are the
 unmodified train step (`cadence=None` is bit-identical to no telemetry).
-Host-side, each collection lands in a bounded `RingBuffer`.
+Host-side, each collection lands in a bounded `RingBuffer` — and, when an
+`obs.Recorder` is attached (DESIGN.md §12), streams into the run-log as a
+`"numerics/snapshot"` event (`snapshot_event` compacts it: per-layer
+scalar signals + resolved widths, exponent histograms dropped), which is
+what `analysis/report.py --follow` renders live.
 """
 from __future__ import annotations
 
@@ -124,14 +128,38 @@ def grad_stats(grads, cfg) -> Dict[str, TensorStats]:
                                                     role="wgrad")}
 
 
-class RingBuffer:
-    """Bounded host-side history of telemetry collections."""
+def snapshot_event(snapshot: dict) -> dict:
+    """Run-log form of a telemetry snapshot: per-layer scalar signals +
+    resolved widths, exponent histograms dropped (they dominate the bytes
+    and the live table doesn't render them; post-hoc analysis still has
+    the full ring buffer / results dump)."""
+    keep = ("sqnr_db", "clip_frac", "sat_tile_frac", "ftz_frac",
+            "exp_spread")
+    out: Dict[str, Any] = {}
+    for source in ("weights", "grads", "acts"):
+        layers = snapshot.get(source)
+        if not layers:
+            continue
+        out[source] = {layer: {k: s[k] for k in keep if k in s}
+                       for layer, s in layers.items()}
+    out["widths"] = snapshot.get("widths", {})
+    return out
 
-    def __init__(self, maxlen: int = 64):
+
+class RingBuffer:
+    """Bounded host-side history of telemetry collections. With a
+    `recorder`, every append also streams as a `"numerics/snapshot"`
+    run-log event (compacted via `snapshot_event`)."""
+
+    def __init__(self, maxlen: int = 64, *, recorder=None):
         self._buf = collections.deque(maxlen=maxlen)
+        self.recorder = recorder
 
     def append(self, step: int, snapshot: dict):
         self._buf.append((int(step), snapshot))
+        if self.recorder is not None and self.recorder.enabled:
+            self.recorder.emit("numerics/snapshot", step=int(step),
+                               **snapshot_event(snapshot))
 
     def latest(self) -> Optional[Tuple[int, dict]]:
         return self._buf[-1] if self._buf else None

@@ -32,8 +32,15 @@ the current policy segment (`ResolvedPolicy.with_controller`, exact-name
 match) and starts a new "segment", so the host dispatcher swaps compiled
 variants — PR 1's per-segment jit machinery (DESIGN.md §8/§11). Names may
 be role-qualified ("layer@wgrad") to pin a single GEMM role of one layer.
-The full decision log and controller state serialize into checkpoint meta
-(`to_meta` / `load_meta`), making restarts replay-identical.
+Controller state and the decision log serialize into checkpoint meta
+(`to_meta` / `load_meta`), making restarts replay-identical. The meta log
+is capped at `meta_log_cap` entries (default 256; "log_dropped" counts
+evictions) so long adaptive runs don't grow checkpoints unboundedly —
+replay stays bit-identical because decisions depend only on the
+widths/floor/votes/cooldown state. With an `obs.Recorder` attached
+(`recorder=`, or automatically via `train.make_step(recorder=...)`),
+every decision also streams live as a `"precision/decision"` run-log
+event (DESIGN.md §12) — the uncapped stream.
 """
 from __future__ import annotations
 
@@ -109,17 +116,32 @@ class PrecisionController:
     """
 
     def __init__(self, config: Optional[ControllerConfig] = None,
-                 base_bits: int = 8):
+                 base_bits: int = 8, *, recorder=None,
+                 meta_log_cap: int = 256):
         self.config = config or ControllerConfig()
         if base_bits not in self.config.ladder:
             raise ValueError(f"base_bits {base_bits} not on ladder "
                              f"{self.config.ladder}")
+        if meta_log_cap < 1:
+            raise ValueError(f"meta_log_cap must be >= 1, got "
+                             f"{meta_log_cap}")
         self.base_bits = int(base_bits)
         self.widths: Dict[str, int] = {}     # only layers that diverged
         self._floor: Dict[str, int] = {}     # ratchet: min allowed width
         self._votes: Dict[str, int] = {}     # +widen / -narrow streak
         self._cooldown: Dict[str, int] = {}
         self.log: List[dict] = []
+        # decisions already dropped from the serialized window (see
+        # to_meta: the checkpoint carries only the last `meta_log_cap`
+        # log entries so long adaptive runs don't grow checkpoints
+        # unboundedly; replay stays bit-identical because future
+        # decisions depend on widths/floor/votes/cooldown, not the log)
+        self.meta_log_cap = int(meta_log_cap)
+        self.log_dropped = 0
+        # optional obs.Recorder: every decision also streams into the
+        # run-log as a "precision/decision" event (DESIGN.md §12);
+        # train.make_step attaches its recorder here when none is set
+        self.recorder = recorder
 
     # -- state ------------------------------------------------------------
     def width(self, layer: str) -> int:
@@ -212,16 +234,29 @@ class PrecisionController:
                                       s.get("clip_frac", 0.0)))}
         self.log.append(d)
         decisions.append(d)
+        if self.recorder is not None and self.recorder.enabled:
+            self.recorder.emit("precision/decision", step=int(step),
+                               **{k: v for k, v in d.items()
+                                  if k != "step"})
 
     # -- persistence (checkpoint meta) ------------------------------------
     def to_meta(self) -> dict:
+        """Serializable state. The decision log is capped to the last
+        `meta_log_cap` entries ("log_dropped" counts the rest) — the
+        retained window round-trips verbatim and restarts still replay
+        bit-identically, because the control law reads widths/floor/
+        votes/cooldown, never the log. The full stream lives in the
+        run-log when a recorder is attached."""
+        cap = self.meta_log_cap
+        dropped = self.log_dropped + max(0, len(self.log) - cap)
         return {"base_bits": self.base_bits,
                 "config": dataclasses.asdict(self.config),
                 "widths": dict(self.widths),
                 "floor": dict(self._floor),
                 "votes": dict(self._votes),
                 "cooldown": dict(self._cooldown),
-                "log": list(self.log)}
+                "log": list(self.log[-cap:]),
+                "log_dropped": dropped}
 
     def load_meta(self, meta: dict) -> "PrecisionController":
         """Restore controller state saved by `to_meta` (checkpoint resume).
@@ -236,6 +271,7 @@ class PrecisionController:
         self._votes = {k: int(v) for k, v in meta["votes"].items()}
         self._cooldown = {k: int(v) for k, v in meta["cooldown"].items()}
         self.log = list(meta["log"])
+        self.log_dropped = int(meta.get("log_dropped", 0))
         return self
 
     @classmethod

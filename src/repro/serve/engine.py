@@ -12,6 +12,16 @@ under overload.
 Weights are the narrow-BFP serving copy (paper §4.2: 8-bit mantissa weights
 at inference); with arch.bfp_kv_cache the lanes store 8-bit BFP K/V
 (EXPERIMENTS.md §Perf cell 3).
+
+Observability (DESIGN.md §12): the engine carries an `obs.MetricsRegistry`
+(`engine.metrics`) updated in-band — per-request TTFT histogram,
+tokens/sec, queue-depth and active-lane gauges, admitted/completed
+counters — and, when an `obs.Recorder` is attached, emits "serve/admit" /
+"serve/complete" / "serve/queue" events plus a "span" per decode tick.
+Completions are counted exactly once per request regardless of whether the
+request finishes inside step(), inside drain(), or at admission. All
+timing reads the recorder's injected clock, so tests drive a ManualClock
+and assert exact TTFT/throughput numbers.
 """
 from __future__ import annotations
 
@@ -24,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import decode_step, make_cache, prefill
+from repro.obs import NULL_RECORDER, MetricsRegistry
 from repro.train.serve_step import (_serve_cfg, _serve_ctx,
                                     narrow_serving_params)
 
@@ -34,14 +45,35 @@ class _Req:
     pos: int                 # next position to generate
     remaining: int
     tokens: List[int]
+    t_submit: float = 0.0    # recorder-clock perf() at submit()
+    t_first: float = 0.0     # ... at first generated token (TTFT end)
 
 
 class ServeEngine:
     def __init__(self, arch: ArchConfig, params, hbfp,
                  *, max_batch: int = 8, ctx_len: int = 512,
                  eos_id: Optional[int] = None, greedy: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, recorder=None, metrics=None):
         self.arch = arch
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
+        if self.recorder.enabled and self.recorder.sync_fn is None:
+            self.recorder.sync_fn = jax.block_until_ready
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._m_queue = self.metrics.gauge(
+            "serve_queue_depth", "requests waiting for a lane")
+        self._m_lanes = self.metrics.gauge(
+            "serve_active_lanes", "lanes occupied by a live request")
+        self._m_admitted = self.metrics.counter(
+            "serve_requests_total", "requests admitted into a lane")
+        self._m_done = self.metrics.counter(
+            "serve_completions_total", "requests completed")
+        self._m_tokens = self.metrics.counter(
+            "serve_tokens_total", "tokens generated (prefill firsts incl.)")
+        self._m_ttft = self.metrics.histogram(
+            "serve_ttft_seconds", "submit-to-first-token latency")
+        # {rid: {ttft_s, tokens, dur_s, tok_per_s}} — filled at completion
+        self.request_stats: Dict[int, dict] = {}
+        self._t_submit: Dict[int, float] = {}
         self.hbfp = _serve_cfg(hbfp)
         self.params = narrow_serving_params(params, arch, hbfp)
         self.max_batch = max_batch
@@ -88,9 +120,13 @@ class ServeEngine:
                              f"{self.ctx_len}")
         rid = self._next_rid
         self._next_rid += 1
+        self._t_submit[rid] = self.recorder.clock.perf()
         lane = next((i for i, s in enumerate(self.slots) if s is None), None)
         if lane is None or self.pending:  # keep FIFO order under overload
             self.pending.append((rid, list(prompt), max_new_tokens))
+            self._m_queue.set(len(self.pending))
+            self.recorder.emit("serve/queue", rid=rid,
+                               depth=len(self.pending))
             return rid
         self._admit(lane, rid, prompt, max_new_tokens)
         return rid
@@ -103,18 +139,46 @@ class ServeEngine:
         plen = len(prompt)
         assert plen < self.ctx_len
         toks = jnp.asarray(prompt, jnp.int32)[None]
-        logits, pcache = self._prefill1(self.params, toks, plen=plen)
-        # write the prompt KV into lane slots [0, plen)
-        self.cache = self._insert_lane(self.cache, pcache, lane, plen)
-        first = int(self._pick(logits[:, -1])[0])
-        req = _Req(rid, plen, max_new_tokens - 1, [first])
+        # the int() conversion below blocks on the device, so the admit
+        # span covers the full prefill (no explicit sync needed)
+        with self.recorder.span("serve/admit", rid=rid, lane=lane,
+                                plen=plen):
+            logits, pcache = self._prefill1(self.params, toks, plen=plen)
+            # write the prompt KV into lane slots [0, plen)
+            self.cache = self._insert_lane(self.cache, pcache, lane, plen)
+            first = int(self._pick(logits[:, -1])[0])
+        now = self.recorder.clock.perf()
+        t_sub = self._t_submit.get(rid, now)
+        self._m_admitted.inc()
+        self._m_tokens.inc()
+        self._m_ttft.observe(now - t_sub)
+        self.recorder.emit("serve/admit", rid=rid, lane=lane, plen=plen,
+                           ttft_s=now - t_sub,
+                           queued=len(self.pending))
+        req = _Req(rid, plen, max_new_tokens - 1, [first],
+                   t_submit=t_sub, t_first=now)
         if req.remaining <= 0 or (self.eos_id is not None
                                   and first == self.eos_id):
             self._finished[rid] = req.tokens
+            self._complete(req, now)
         else:
             self._last_tok = self._last_tok.at[lane, 0].set(first)
             self.slots[lane] = req
+            self._m_lanes.set(sum(s is not None for s in self.slots))
         return first
+
+    def _complete(self, req: _Req, t_end: float) -> None:
+        """Record one request's terminal stats — called exactly once per
+        request (at admission for instant completions, else when its lane
+        frees in step()); delivery of tokens is a separate concern."""
+        self._m_done.inc()
+        dur = t_end - req.t_submit
+        n = len(req.tokens)
+        stats = {"ttft_s": req.t_first - req.t_submit, "tokens": n,
+                 "dur_s": dur, "tok_per_s": (n / dur) if dur > 0 else 0.0}
+        self.request_stats[req.rid] = stats
+        self._t_submit.pop(req.rid, None)
+        self.recorder.emit("serve/complete", rid=req.rid, **stats)
 
     def _drain_pending(self, out: Dict[int, int]):
         """Admit queued requests into free lanes (FIFO); their prefill-
@@ -161,11 +225,16 @@ class ServeEngine:
         request and `_finished` stays bounded."""
         out: Dict[int, int] = {}
         if any(self.slots):
-            pos = jnp.asarray([[s.pos if s else 0] for s in self.slots],
-                              jnp.int32)
-            logits, self.cache = self._decode(self.params, self.cache,
-                                              self._last_tok, pos)
-            nxt = self._pick(logits)
+            n_active = sum(s is not None for s in self.slots)
+            with self.recorder.span("serve/step", active=n_active,
+                                    lanes=self.max_batch) as sp:
+                pos = jnp.asarray([[s.pos if s else 0] for s in self.slots],
+                                  jnp.int32)
+                logits, self.cache = self._decode(self.params, self.cache,
+                                                  self._last_tok, pos)
+                nxt = self._pick(logits)
+                sp.sync(nxt)
+            now = self.recorder.clock.perf()
             for i, s in enumerate(self.slots):
                 if s is None:
                     continue
@@ -173,12 +242,16 @@ class ServeEngine:
                 s.tokens.append(t)
                 s.pos += 1
                 s.remaining -= 1
+                self._m_tokens.inc()
                 out[s.rid] = t
                 if s.remaining <= 0 or (self.eos_id is not None
                                         and t == self.eos_id):
                     self.slots[i] = None  # lane freed for the next request
+                    self._complete(s, now)
             self._last_tok = nxt[:, None]
         self._drain_pending(out)
+        self._m_lanes.set(sum(s is not None for s in self.slots))
+        self._m_queue.set(len(self.pending))
         for rid, toks in self._finished.items():
             out.setdefault(rid, toks[-1])
         self._finished.clear()

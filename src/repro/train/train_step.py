@@ -234,7 +234,7 @@ def _tap_widths(seg: ResolvedPolicy, snapshot: dict) -> dict:
 
 
 def make_step(arch: ArchConfig, policy, schedule, *,
-              controller=None, tap=None,
+              controller=None, tap=None, recorder=None,
               jit_compile: bool = True, donate: bool = False, **kwargs):
     """THE train-step entry point (DESIGN.md §11): one `PrecisionPolicy`
     drives format, schedule, per-layer/per-role widths, controller loop,
@@ -260,12 +260,22 @@ def make_step(arch: ArchConfig, policy, schedule, *,
         override state merges into the segment for the *next* step —
         variants are cached per (segment ⊕ overrides, telemetry), so the
         loop compiles O(#distinct decisions), not O(steps).
+      * `recorder` (an `obs.Recorder`, DESIGN.md §12) streams the run
+        into the log: `"train/recompile"` when a new jit variant is
+        built, `"numerics/snapshot"` (per-layer scalar signals + resolved
+        widths) on every tap-cadence collection — with or without a
+        controller — and the controller's `"precision/decision"` events
+        (the controller picks up this recorder unless it already has
+        one). Emission is host-side and after the step call: the compiled
+        computation is bit-identical with or without a recorder.
 
     `metrics` gains "mantissa_bits" (the segment's global width, 0 for
     FP32) and — with a controller — "n_overrides" / "min_mantissa_bits".
     Attributes on the returned fn: `.policy`, `.variants`, `.controller`,
     `.buffer`, `.tap`. Extra kwargs forward to `make_train_step`.
     """
+    from repro.obs import NULL_RECORDER
+    rec = recorder if recorder is not None else NULL_RECORDER
     pol = as_policy(policy, backend=arch.kernel_backend)
     buffer = None
     if controller is not None:
@@ -274,7 +284,9 @@ def make_step(arch: ArchConfig, policy, schedule, *,
             raise ValueError("adaptive precision needs a BFP base format; "
                              "fp32 has nothing to widen or narrow")
         tap = tap if tap is not None else TapConfig()
-        buffer = RingBuffer(tap.history)
+        buffer = RingBuffer(tap.history, recorder=rec)
+        if rec.enabled and getattr(controller, "recorder", None) is None:
+            controller.recorder = rec  # decisions stream as events
 
     variants = {}
     segments = {}
@@ -285,7 +297,7 @@ def make_step(arch: ArchConfig, policy, schedule, *,
             seg = segments[i] = pol.resolve_segment(i)
         return seg
 
-    def variant(seg: ResolvedPolicy, telemetry: bool):
+    def variant(seg: ResolvedPolicy, telemetry: bool, step):
         fn = variants.get((seg, telemetry))
         if fn is None:
             fn = make_train_step(arch, seg, schedule,
@@ -293,6 +305,13 @@ def make_step(arch: ArchConfig, policy, schedule, *,
             if jit_compile:
                 fn = jax.jit(fn, donate_argnums=(0,) if donate else ())
             variants[(seg, telemetry)] = fn
+            gcfg = seg.global_cfg
+            rec.emit("train/recompile", step=step,
+                     mantissa_bits=0 if gcfg is None else gcfg.mantissa_bits,
+                     n_overrides=len(seg.layer_overrides)
+                     + len(seg.controller_overrides),
+                     backend=seg.backend, telemetry=telemetry,
+                     n_variants=len(variants))
         return fn
 
     # int(state.step) blocks on the previous step's output (a host sync
@@ -311,19 +330,28 @@ def make_step(arch: ArchConfig, policy, schedule, *,
             # the controller's override state names the current adaptive
             # "segment"; decisions take effect at the next step
             seg = seg.with_controller(controller.overrides())
-        state, metrics = variant(seg, telemetry)(state, batch, key)
+        state, metrics = variant(seg, telemetry, step)(state, batch, key)
         metrics = dict(metrics)
-        if telemetry and controller is not None:
-            from repro.numerics.controller import merge_sources
+        if telemetry and (controller is not None or rec.enabled):
             from repro.numerics.stats import stats_to_host
             # absent when every tap is disabled for this step shape (e.g.
-            # acts-only taps under grad accumulation) — nothing to observe
-            numerics = metrics.pop("numerics", None)
+            # acts-only taps under grad accumulation) — nothing to observe.
+            # Without a controller the stats pytree stays in metrics for
+            # upstream consumers (pre-recorder contract).
+            numerics = (metrics.pop("numerics", None)
+                        if controller is not None
+                        else metrics.get("numerics"))
             if numerics is not None:
                 snapshot = stats_to_host(numerics)
                 snapshot["widths"] = _tap_widths(seg, snapshot)
-                buffer.append(step, snapshot)
-                controller.observe(step, merge_sources(snapshot))
+                if controller is not None:
+                    from repro.numerics.controller import merge_sources
+                    buffer.append(step, snapshot)  # emits numerics/snapshot
+                    controller.observe(step, merge_sources(snapshot))
+                else:
+                    from repro.numerics.collect import snapshot_event
+                    rec.emit("numerics/snapshot", step=step,
+                             **snapshot_event(snapshot))
         gcfg = seg.global_cfg
         metrics["mantissa_bits"] = jnp.asarray(
             0 if gcfg is None else gcfg.mantissa_bits, jnp.float32)

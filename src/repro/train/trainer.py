@@ -22,17 +22,25 @@ Behaviours (exercised by tests/test_trainer.py):
     `numerics.PrecisionController`, paired with `train.make_step(...,
     controller=...)`) — its full state incl. the decision log is
     serialized into checkpoint meta ("numerics_controller") and restored
-    on resume, so a restarted run replays identical decisions.
+    on resume, so a restarted run replays identical decisions;
+  * observability (DESIGN.md §12): pass `recorder=` (an `obs.Recorder`)
+    — every step runs inside a `"train/step"` span (synced via
+    block_until_ready on log-cadence steps, dispatch-only otherwise),
+    progress lines become `"train/progress"` events (and the printed
+    line is rendered from the same record), and checkpoint save/load
+    events flow through to `repro.checkpoint`. All loop timing reads the
+    recorder's *injected* clock, never `time.time()` directly, so tests
+    drive a `ManualClock` and timing output is deterministic.
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.obs import NULL_RECORDER
 from repro.train.train_step import TrainState
 
 
@@ -42,10 +50,16 @@ class Trainer:
                  ckpt_every: int = 50, keep: int = 3,
                  hbfp=None,  # HBFPConfig | PrecisionSchedule | None
                  controller=None,  # numerics.PrecisionController | None
+                 recorder=None,  # obs.Recorder | None (no-op default)
                  seed: int = 0, background_ckpt: bool = False,
                  state_shardings=None):
         self.train_step = train_step
         self.data_fn = data_fn
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
+        if self.recorder.enabled and self.recorder.sync_fn is None:
+            # spans around jitted work need a completion barrier; obs is
+            # jax-free so the barrier is injected here (DESIGN.md §12)
+            self.recorder.sync_fn = jax.block_until_ready
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.keep = keep
@@ -58,7 +72,8 @@ class Trainer:
         self._pending = None
         if ckpt_dir is not None and latest_step(ckpt_dir) is not None:
             self.state, meta = load_checkpoint(ckpt_dir, init_state,
-                                               shardings=state_shardings)
+                                               shardings=state_shardings,
+                                               recorder=self.recorder)
             self.start_step = int(meta["step"])
             if controller is not None and "numerics_controller" in meta:
                 controller.load_meta(meta["numerics_controller"])
@@ -76,30 +91,43 @@ class Trainer:
             r = save_checkpoint(self.ckpt_dir, step, self.state,
                                 hbfp=self.hbfp, keep=self.keep,
                                 background=self.background_ckpt,
-                                extra_meta=extra)
+                                extra_meta=extra, recorder=self.recorder)
             if self.background_ckpt:
                 self._pending = r
 
     def run(self, num_steps: int, *, fail_at_step: Optional[int] = None,
             log_every: int = 10, log_fn=print):
         """Run to global step `num_steps` (absolute, resume-aware)."""
+        rec = self.recorder
         metrics = {}
-        t0 = time.time()
+        t0 = rec.clock.perf()
         for step in range(self.start_step, num_steps):
             if fail_at_step is not None and step == fail_at_step:
                 raise RuntimeError(f"simulated preemption at step {step}")
             batch = self.data_fn(step)
             key = jax.random.fold_in(jax.random.key(self.seed), step)
-            self.state, metrics = self.train_step(self.state, batch, key)
-            if log_every and step % log_every == 0:
-                # scalars only (a taps-enabled step's "numerics" aux is a
-                # nested stats pytree — consumed upstream, skipped here)
-                ljit = {k: float(v) for k, v in metrics.items()
-                        if hasattr(v, "ndim") and v.ndim == 0
-                        or isinstance(v, (int, float))}
-                log_fn(f"step {step:6d} "
-                       + " ".join(f"{k}={v:.4f}" for k, v in ljit.items())
-                       + f" ({time.time() - t0:.1f}s)")
+            log_now = bool(log_every) and step % log_every == 0
+            ljit = {}
+            with rec.span("train/step", step=step) as sp:
+                self.state, metrics = self.train_step(self.state, batch, key)
+                if log_now:
+                    # scalars only (a taps-enabled step's "numerics" aux is
+                    # a nested stats pytree — consumed upstream, skipped
+                    # here). float() blocks on the step's outputs, so the
+                    # span duration includes device time on log steps.
+                    ljit = {k: float(v) for k, v in metrics.items()
+                            if hasattr(v, "ndim") and v.ndim == 0
+                            or isinstance(v, (int, float))}
+                    sp.sync(self.state.params)
+            if log_now:
+                elapsed = rec.clock.perf() - t0
+                rec.emit("train/progress", step=step, elapsed_s=elapsed,
+                         **ljit)
+                if log_fn is not None:
+                    log_fn(f"step {step:6d} "
+                           + " ".join(f"{k}={v:.4f}"
+                                      for k, v in ljit.items())
+                           + f" ({elapsed:.1f}s)")
             self._maybe_ckpt(step + 1)
         self._maybe_ckpt(num_steps, force=True)
         if self._pending is not None:

@@ -30,7 +30,7 @@ def test_module_docstrings_present():
 
 
 def test_api_surface_matches_snapshot():
-    """The repro.precision public surface matches tools/api_surface.json
+    """The repro.precision + repro.obs surfaces match tools/api_surface.json
     (the CI `api-surface` job runs the same check via tools/check_api.py);
     deliberate changes are recorded with `check_api.py --update`."""
     r = subprocess.run([sys.executable,

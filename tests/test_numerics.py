@@ -221,6 +221,61 @@ def test_controller_meta_roundtrip_through_json():
     assert d1 == d2
 
 
+def test_controller_meta_log_cap_preserves_replay():
+    """Satellite (ISSUE 8): checkpoint meta keeps only the newest
+    `meta_log_cap` decisions, counting the rest in "log_dropped" — and a
+    restore still replays bit-identically, because the control law reads
+    widths/votes/cooldown, never the log. (The uncapped stream lives in
+    the run-log when a recorder is attached.)"""
+    cfg = ControllerConfig(patience=1, cooldown=0)
+    c = PrecisionController(cfg, base_bits=4, meta_log_cap=4)
+    c.observe(0, {f"layer_{i}": _obs(5.0) for i in range(10)})
+    assert len(c.log) == 10                  # full log stays in-process
+    meta = json.loads(json.dumps(c.to_meta()))
+    assert meta["log"] == c.log[-4:]         # retained window is verbatim
+    assert meta["log_dropped"] == 6
+    c2 = PrecisionController.from_meta(meta)
+    assert c2.widths == c.widths and c2.log_dropped == 6
+    d1 = c.observe(1, {"layer_0": _obs(5.0), "fresh": _obs(5.0)})
+    d2 = c2.observe(1, {"layer_0": _obs(5.0), "fresh": _obs(5.0)})
+    assert d1 == d2 and len(d1) > 0          # identical continued replay
+    with pytest.raises(ValueError, match="meta_log_cap"):
+        PrecisionController(cfg, meta_log_cap=0)
+
+
+def test_controller_decisions_stream_to_recorder():
+    from repro.obs import ManualClock, MemorySink, Recorder
+    ms = MemorySink()
+    c = PrecisionController(ControllerConfig(patience=1, cooldown=0),
+                            base_bits=4,
+                            recorder=Recorder([ms], clock=ManualClock()))
+    c.observe(3, {"layers/ffn_w": _obs(5.0)})
+    (ev,) = ms.of_kind("precision/decision")
+    assert ev.step == 3
+    assert ev.data["layer"] == "layers/ffn_w"
+    assert ev.data["action"] == "widen"
+    assert ev.data["from"] == 4 and ev.data["to"] == 8
+    assert "step" not in ev.data             # step lives on the envelope
+    assert c.log[0]["step"] == 3             # ...but stays in the log dict
+
+
+def test_ring_buffer_streams_snapshot_events():
+    from repro.obs import MemorySink, Recorder
+    ms = MemorySink()
+    rb = RingBuffer(maxlen=2, recorder=Recorder([ms]))
+    snap = {"weights": {"l": dict(_obs(20.0), exp_spread=2, n=64,
+                                  exp_hist=[1, 2, 3])},
+            "widths": {"weights": {"l": 4}}}
+    rb.append(5, snap)
+    (ev,) = ms.of_kind("numerics/snapshot")
+    assert ev.step == 5
+    assert ev.data["weights"]["l"]["sqnr_db"] == 20.0
+    assert "exp_hist" not in ev.data["weights"]["l"]  # compacted
+    assert "n" not in ev.data["weights"]["l"]
+    assert ev.data["widths"] == {"weights": {"l": 4}}
+    assert rb.latest() == (5, snap)          # buffer itself keeps the full
+
+
 def test_merge_sources_takes_worst_case():
     snap = {"weights": {"l": _obs(40.0, clip=0.01)},
             "grads": {"l": _obs(12.0, clip=0.2)},

@@ -132,6 +132,97 @@ def test_at_admission_completion_delivered_by_step(setup):
         assert r1 not in eng.step()               # and never re-delivered
 
 
+def test_serve_metrics_ttft_and_throughput_per_request(setup):
+    """Satellite (ISSUE 8): per-request TTFT and tokens/sec computed on
+    the recorder's injected clock — exact numbers under a ManualClock."""
+    from repro.obs import ManualClock, MemorySink, Recorder
+    arch, params = setup
+    clk = ManualClock()
+    ms = MemorySink()
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=32,
+                      recorder=Recorder([ms], clock=clk,
+                                        sync=lambda x: x))
+    r1 = eng.submit([3, 1], max_new_tokens=3)   # admitted at t=0
+    clk.advance(1.0)
+    while any(eng.slots):
+        eng.step()
+        clk.advance(1.0)
+    st = eng.request_stats[r1]
+    # admission is instant on the manual clock → TTFT 0; the second decode
+    # step (the one that finishes the request) completes at t=2.0
+    assert st["ttft_s"] == 0.0
+    assert st["tokens"] == 3
+    assert st["dur_s"] == pytest.approx(2.0)
+    assert st["tok_per_s"] == pytest.approx(1.5)
+    done = ms.of_kind("serve/complete")
+    assert len(done) == 1 and done[0].data["rid"] == r1
+    assert done[0].data["tok_per_s"] == pytest.approx(1.5)
+    # a queued request's TTFT includes its time in the queue
+    r2 = eng.submit([5], max_new_tokens=2)
+    r3 = eng.submit([6], max_new_tokens=2)
+    eng.submit([7], max_new_tokens=2)            # lanes full → r4 queues
+    clk.advance(2.0)
+    eng.drain()
+    hist = eng.metrics.get("serve_ttft_seconds")
+    assert hist.count == 4
+    assert eng.request_stats[r2]["ttft_s"] == 0.0
+    assert eng.request_stats[r3]["ttft_s"] == 0.0
+    queued = [st for rid, st in eng.request_stats.items()
+              if rid not in (r1, r2, r3)]
+    assert queued[0]["ttft_s"] >= 2.0
+
+
+def test_serve_completions_counted_exactly_once(setup):
+    """Completions increment once per request across every delivery path:
+    finish inside step(), finish inside drain(), and completion at
+    admission (max_new_tokens=1, never occupies a lane)."""
+    arch, params = setup
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=1, ctx_len=32)
+    done = eng.metrics.get("serve_completions_total")
+    r1 = eng.submit([3, 1], max_new_tokens=1)    # completes at admission
+    assert done.value == 1
+    eng.step()                                    # delivers r1; no double
+    assert done.value == 1
+    r2 = eng.submit([4, 2], max_new_tokens=2)
+    while any(eng.slots):                         # r2 finishes via step()
+        eng.step()
+    assert done.value == 2
+    r3 = eng.submit([5], max_new_tokens=3)
+    res = eng.drain()                             # r3 finishes via drain()
+    assert done.value == 3
+    assert sorted(res) == [r3] or r3 in res
+    assert eng.metrics.get("serve_requests_total").value == 3
+    assert sorted(eng.request_stats) == [r1, r2, r3]
+    # token accounting: one per generated token, prefill firsts included
+    n_tok = sum(st["tokens"] for st in eng.request_stats.values())
+    assert eng.metrics.get("serve_tokens_total").value == n_tok == 6
+
+
+def test_serve_queue_depth_gauge_tracks_fifo(setup):
+    """The queue-depth gauge mirrors len(pending) through overload and
+    drain; the active-lanes gauge returns to zero when the engine idles."""
+    from repro.obs import MemorySink, Recorder
+    arch, params = setup
+    ms = MemorySink()
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=1, ctx_len=32,
+                      recorder=Recorder([ms], sync=lambda x: x))
+    depth = eng.metrics.get("serve_queue_depth")
+    lanes = eng.metrics.get("serve_active_lanes")
+    eng.submit([1], max_new_tokens=2)
+    r2 = eng.submit([2], max_new_tokens=2)
+    r3 = eng.submit([3], max_new_tokens=2)
+    assert depth.value == 2 and lanes.value == 1
+    assert [e.data["rid"] for e in ms.of_kind("serve/queue")] == [r2, r3]
+    eng.step()                     # r1 done, r2 admitted from the queue
+    assert depth.value == 1 and lanes.value == 1
+    eng.drain()
+    assert depth.value == 0 and lanes.value == 0
+    assert len(eng.pending) == 0
+    # every admission recorded, queue events only for the queued two
+    assert len(ms.of_kind("serve/admit")) == 3
+    assert len(ms.of_kind("serve/queue")) == 2
+
+
 def test_bfp_kv_cache_serving(setup):
     """Engine runs with the 8-bit BFP cache lanes (beyond-paper serving)."""
     import dataclasses

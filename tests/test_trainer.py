@@ -103,6 +103,69 @@ def test_background_checkpoint(tmp_path, setup):
     np.testing.assert_array_equal(np.asarray(restored["x"]), np.arange(10))
 
 
+def test_trainer_timing_deterministic_with_manual_clock(setup):
+    """Satellite (ISSUE 8): the loop reads time only from the recorder's
+    injected clock, so a ManualClock makes every elapsed figure — span
+    durations, progress events, the printed line — exactly assertable."""
+    from repro.obs import ManualClock, MemorySink, Recorder
+    _, pipe, step, state = setup
+    clk = ManualClock()
+    ms = MemorySink()
+    synced = []
+    rec = Recorder([ms], clock=clk, sync=synced.append)
+
+    def data(i):          # the pipeline "takes" 0.25s per step
+        clk.advance(0.25)
+        return pipe.batch(i)
+
+    def stepped(s, b, k):  # the device "takes" 0.1s per step
+        clk.advance(0.1)
+        return step(s, b, k)
+
+    lines = []
+    tr = Trainer(train_step=stepped, init_state=state, data_fn=data,
+                 ckpt_dir=None, recorder=rec)
+    tr.run(6, log_every=5, log_fn=lines.append)
+
+    spans = ms.of_kind("span")
+    assert len(spans) == 6
+    assert all(e.data["name"] == "train/step" for e in spans)
+    assert all(e.data["dur_us"] == pytest.approx(0.1e6) for e in spans)
+    # sync (block_until_ready stand-in) only on log-cadence steps
+    assert [e.data["synced"] for e in spans] == [True, False, False,
+                                                False, False, True]
+    assert len(synced) == 2
+    prog = ms.of_kind("train/progress")
+    assert [e.step for e in prog] == [0, 5]
+    assert prog[0].data["elapsed_s"] == pytest.approx(0.35)
+    assert prog[1].data["elapsed_s"] == pytest.approx(6 * 0.35)
+    assert lines[0].startswith("step      0 ") and "(0.3s)" in lines[0]
+    assert "(2.1s)" in lines[1]
+
+
+def test_trainer_checkpoint_events_flow_to_recorder(tmp_path, setup):
+    from repro.obs import MemorySink, Recorder
+    _, pipe, step, state = setup
+    d = str(tmp_path / "obs_ckpt")
+    ms = MemorySink()
+    tr = Trainer(train_step=step, init_state=state, data_fn=pipe.batch,
+                 ckpt_dir=d, ckpt_every=2, hbfp=HBFP8_16,
+                 recorder=Recorder([ms]))
+    tr.run(3, log_every=0)
+    saves = ms.of_kind("ckpt/save")
+    assert [e.step for e in saves] == [2, 3]
+    assert all(e.data["bytes"] > 0 and e.data["dur_s"] >= 0 for e in saves)
+    # a resuming trainer emits the restore
+    ms2 = MemorySink()
+    tr2 = Trainer(train_step=step, init_state=state, data_fn=pipe.batch,
+                  ckpt_dir=d, ckpt_every=2, hbfp=HBFP8_16,
+                  recorder=Recorder([ms2]))
+    assert tr2.start_step == 3
+    loads = ms2.of_kind("ckpt/load")
+    assert [e.step for e in loads] == [3]
+    assert loads[0].data["bytes"] == saves[-1].data["bytes"]
+
+
 def test_elastic_restore_structure_only(tmp_path, setup):
     """Restore works from ShapeDtypeStructs (any-mesh restore path)."""
     _, _, _, state = setup

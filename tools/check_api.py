@@ -1,14 +1,17 @@
 #!/usr/bin/env python3
-"""Public-API surface guard for `repro.precision` (DESIGN.md §11).
+"""Public-API surface guard for the repo's coordination-point packages
+(DESIGN.md §11 `repro.precision`, §12 `repro.obs`).
 
 The precision policy is the repo's one coordination point for "which BFP,
-where, when" — examples, benchmarks, configs, and the train loop all
-program against it, so accidental signature drift is a repo-wide break.
-This tool snapshots the package's public surface (`__all__` membership,
-function signatures, dataclass fields, public method signatures, module
-constants) into tools/api_surface.json and fails when the live source no
-longer matches — unreviewed drift fails the CI `api-surface` job (and the
-docs lane, alongside check_docstrings / check_doc_links).
+where, when", and the obs plane is the one event/metrics contract every
+layer emits into — examples, benchmarks, configs, the train loop, and the
+serving engine all program against them, so accidental signature drift is
+a repo-wide break. This tool snapshots each package's public surface
+(`__all__` membership, function signatures, dataclass fields, public
+method signatures, module constants) into tools/api_surface.json and
+fails when the live source no longer matches — unreviewed drift fails the
+CI `api-surface` job (and the docs lane, alongside check_docstrings /
+check_doc_links).
 
 The surface is extracted *statically* with `ast`, so the check needs no
 jax/numpy install (the docs lane is dependency-free). Deliberate API
@@ -23,8 +26,12 @@ import os
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-PKG = os.path.join(ROOT, "src", "repro", "precision")
+PACKAGES = ("repro.precision", "repro.obs")
 SNAPSHOT = os.path.join(ROOT, "tools", "api_surface.json")
+
+
+def _pkg_dir(pkg: str) -> str:
+    return os.path.join(ROOT, "src", *pkg.split("."))
 
 
 def _sig(fn) -> str:
@@ -62,43 +69,53 @@ def _module_defs(path: str) -> dict:
                 and isinstance(node.targets[0], ast.Name):
             defs[node.targets[0].id] = {"kind": "constant",
                                         "value": ast.unparse(node.value)}
+        elif isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name) and node.value is not None:
+            defs[node.target.id] = {"kind": "constant",
+                                    "type": ast.unparse(node.annotation),
+                                    "value": ast.unparse(node.value)}
     return defs
 
 
-def _public_all() -> list:
-    with open(os.path.join(PKG, "__init__.py")) as f:
+def _public_all(pkg_dir: str) -> list:
+    with open(os.path.join(pkg_dir, "__init__.py")) as f:
         tree = ast.parse(f.read())
     for node in tree.body:
         if isinstance(node, ast.Assign) and len(node.targets) == 1 \
                 and isinstance(node.targets[0], ast.Name) \
                 and node.targets[0].id == "__all__":
             return list(ast.literal_eval(node.value))
-    raise SystemExit(f"{PKG}/__init__.py: no literal __all__ found")
+    raise SystemExit(f"{pkg_dir}/__init__.py: no literal __all__ found")
 
 
-def surface() -> dict:
+def _pkg_surface(pkg: str) -> dict:
+    pkg_dir = _pkg_dir(pkg)
     defs = {}
-    for fname in sorted(os.listdir(PKG)):
+    for fname in sorted(os.listdir(pkg_dir)):
         if fname.endswith(".py") and fname != "__init__.py":
-            defs.update(_module_defs(os.path.join(PKG, fname)))
-    names = _public_all()
+            defs.update(_module_defs(os.path.join(pkg_dir, fname)))
+    names = _public_all(pkg_dir)
     missing = [n for n in names if n not in defs]
     if missing:
         raise SystemExit(f"__all__ exports with no definition in "
-                         f"src/repro/precision/: {missing}")
-    return {"package": "repro.precision",
-            "__all__": names,
-            "api": {n: defs[n] for n in names}}
+                         f"{os.path.relpath(pkg_dir, ROOT)}/: {missing}")
+    return {"__all__": names, "api": {n: defs[n] for n in names}}
+
+
+def surface() -> dict:
+    return {"packages": {pkg: _pkg_surface(pkg) for pkg in PACKAGES}}
 
 
 def main(argv) -> int:
     live = surface()
+    n_names = sum(len(p["__all__"]) for p in live["packages"].values())
+    pkgs = ", ".join(PACKAGES)
     if "--update" in argv:
         with open(SNAPSHOT, "w") as f:
             json.dump(live, f, indent=1, sort_keys=True)
             f.write("\n")
         print(f"check_api: wrote {os.path.relpath(SNAPSHOT, ROOT)} "
-              f"({len(live['__all__'])} public names)")
+              f"({n_names} public names across {pkgs})")
         return 0
     if not os.path.exists(SNAPSHOT):
         print(f"check_api: missing snapshot {SNAPSHOT}; run "
@@ -107,16 +124,15 @@ def main(argv) -> int:
     with open(SNAPSHOT) as f:
         want = json.load(f)
     if live == want:
-        print(f"check_api: repro.precision surface matches snapshot "
-              f"({len(live['__all__'])} public names)")
+        print(f"check_api: API surface matches snapshot "
+              f"({n_names} public names across {pkgs})")
         return 0
     a = json.dumps(want, indent=1, sort_keys=True).splitlines()
     b = json.dumps(live, indent=1, sort_keys=True).splitlines()
-    print("check_api: PUBLIC API SURFACE DRIFT in repro.precision "
+    print(f"check_api: PUBLIC API SURFACE DRIFT ({pkgs}) "
           "(snapshot vs source):")
     for line in difflib.unified_diff(a, b, "tools/api_surface.json",
-                                     "src/repro/precision/", lineterm="",
-                                     n=2):
+                                     "src/repro/", lineterm="", n=2):
         print("  " + line)
     print("check_api: if this change is deliberate, refresh with "
           "`python tools/check_api.py --update` and have it reviewed")

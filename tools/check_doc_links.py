@@ -10,7 +10,8 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOCS = ["README.md", "docs/DESIGN.md", "docs/KERNELS.md", "ROADMAP.md"]
+DOCS = ["README.md", "docs/DESIGN.md", "docs/KERNELS.md",
+        "docs/OBSERVABILITY.md", "ROADMAP.md"]
 _TOP = ("src/", "tests/", "benchmarks/", "examples/", "docs/", "tools/")
 
 
