@@ -103,8 +103,9 @@ def decision_table(log):
     lines = ["| step | layer | action | from | to | reason | SQNR dB | "
              "clip |", "|---|---|---|---|---|---|---|---|"]
     for d in log:
+        pfx = "b" if d.get("axis") == "block" else "m"
         lines.append(f"| {d['step']} | {d['layer']} | {d['action']} | "
-                     f"{d['from']} | {d['to']} | {d['reason']} | "
+                     f"{pfx}{d['from']} | {pfx}{d['to']} | {d['reason']} | "
                      f"{d['sqnr_db']:.1f} | {d['clip_frac']:.3f} |")
     return "\n".join(lines)
 
@@ -178,11 +179,19 @@ def follow_runlog(path, *, watch=False, interval=0.5, out=print):
             out("")
         elif kind == "precision/decision":
             n_dec += 1
-            out(f"[{str(data.get('action', '?')).upper()}] step {step} "
-                f"{data.get('layer')}: m{data.get('from')} -> "
-                f"m{data.get('to')} ({data.get('reason')}, "
-                f"sqnr {data.get('sqnr_db', 0.):.1f} dB, "
-                f"clip {data.get('clip_frac', 0.):.3f})")
+            if data.get("axis") == "block":
+                # block-axis moves (shrink_block/grow_block, DESIGN.md §13)
+                out(f"[BLOCK] step {step} {data.get('layer')}: "
+                    f"b{data.get('from')} -> b{data.get('to')} "
+                    f"({data.get('action')}: {data.get('reason')}, "
+                    f"sqnr {data.get('sqnr_db', 0.):.1f} dB, "
+                    f"clip {data.get('clip_frac', 0.):.3f})")
+            else:
+                out(f"[{str(data.get('action', '?')).upper()}] step {step} "
+                    f"{data.get('layer')}: m{data.get('from')} -> "
+                    f"m{data.get('to')} ({data.get('reason')}, "
+                    f"sqnr {data.get('sqnr_db', 0.):.1f} dB, "
+                    f"clip {data.get('clip_frac', 0.):.3f})")
         elif kind == "ckpt/save":
             out(f"[ckpt] saved step {step}: "
                 f"{data.get('bytes', 0) / 2**20:.2f} MiB in "

@@ -75,10 +75,33 @@ class HBFPConfig:
     def name(self) -> str:
         """Paper nomenclature: hbfp<m>_<wide> (tile t)."""
         t = "none" if self.tile is None else str(self.tile)
-        return f"hbfp{self.mantissa_bits}_{self.wide_mantissa_bits}_t{t}"
+        tag = f"hbfp{self.mantissa_bits}_{self.wide_mantissa_bits}_t{t}"
+        if self.act_block is not None:
+            tag += f"_b{self.act_block}"
+        return tag
 
     def with_(self, **kw) -> "HBFPConfig":
         return dataclasses.replace(self, **kw)
+
+    # -- block-size axis (FlexBlock/FAST; DESIGN.md §13) ------------------
+    @property
+    def block_size(self) -> Optional[int]:
+        """The schedulable exponent-sharing block size `b`: the activation
+        feature-axis granularity when set, else the weight tile edge. None ⇒
+        the paper's per-row-block exponents (no feature-axis blocking)."""
+        return self.act_block if self.act_block is not None else self.tile
+
+    def with_block(self, b: Optional[int]) -> "HBFPConfig":
+        """Set the abstract block size `b` on BOTH exponent-sharing axes:
+        2-D weight tiles become (b, b) and activations/gradients share one
+        exponent per b-sized group of the feature axis. `None` restores the
+        paper defaults (tile 128, whole-row activation exponents)."""
+        if b is None:
+            return self.with_(tile=128, act_block=None)
+        b = int(b)
+        if b < 1:
+            raise ValueError(f"block size must be positive, got {b}")
+        return self.with_(tile=b, act_block=b)
 
 
 def resolve(spec, step: int = 0, layer_name: Optional[str] = None

@@ -68,15 +68,18 @@ def _q_b(b, cfg: HBFPConfig, key, kind: str):
 def _role_key(key, i: int, role: str, role_cfg: HBFPConfig,
               base_cfg: HBFPConfig):
     """Operand key for one GEMM role: identical to `_fold(key, i)` at the
-    base (fwd) width — the tensor replays the same draws it got in the
-    forward — and folded with a (role, width) salt otherwise, so a role at
-    its own width never consumes another role's stream (DESIGN.md §11)."""
+    base (fwd) width and block size — the tensor replays the same draws it
+    got in the forward — and folded with a (role, width, block) salt
+    otherwise, so a role at its own format never consumes another role's
+    stream (DESIGN.md §11, §13)."""
     k = _fold(key, i)
     if k is None:
         return None
     from repro.kernels.common import role_stream_salt
     salt = role_stream_salt(role, role_cfg.mantissa_bits,
-                            base_cfg.mantissa_bits)
+                            base_cfg.mantissa_bits,
+                            int(role_cfg.act_block or 0),
+                            int(base_cfg.act_block or 0))
     return jax.random.fold_in(k, salt) if salt else k
 
 

@@ -32,20 +32,35 @@ from typing import Optional, Sequence, Tuple, Union
 from repro.core.formats import HBFPConfig
 
 # Per-layer override values: a full HBFPConfig, a bare mantissa width (applied
-# to the segment config via with_), or None (keep the parameter in FP).
-OverrideValue = Union[None, int, HBFPConfig]
+# to the segment config via with_), an {"m": ..., "b": ...} axis dict (mantissa
+# and/or block size merged into the segment config — the numerics controller
+# emits these when a block-size decision diverges a layer, DESIGN.md §13), or
+# None (keep the parameter in FP).
+OverrideValue = Union[None, int, dict, HBFPConfig]
 
 
 def _apply_override(base: Optional[HBFPConfig],
                     value: OverrideValue) -> Optional[HBFPConfig]:
     if value is None or isinstance(value, HBFPConfig):
         return value
-    # Bare width: merge into the segment config so tile/rounding/wide follow
-    # the segment. In an FP32 segment there is no grid to merge into — a
-    # bare-width override follows the segment and stays FP (an explicit
-    # HBFPConfig override, above, still applies even there).
+    # Bare width / axis dict: merge into the segment config so unspecified
+    # axes (tile/rounding/wide; mantissa or block for a dict) follow the
+    # segment. In an FP32 segment there is no grid to merge into — such an
+    # override follows the segment and stays FP (an explicit HBFPConfig
+    # override, above, still applies even there).
     if base is None:
         return None
+    if isinstance(value, dict):
+        cfg = base
+        m = value.get("m")
+        if m is not None:
+            cfg = cfg.with_(mantissa_bits=int(m),
+                            wide_mantissa_bits=max(cfg.wide_mantissa_bits,
+                                                   int(m)))
+        b = value.get("b")
+        if b is not None:
+            cfg = cfg.with_block(int(b))
+        return cfg
     return base.with_(mantissa_bits=int(value),
                       wide_mantissa_bits=max(base.wide_mantissa_bits,
                                              int(value)))
@@ -175,7 +190,11 @@ class PrecisionSchedule:
     @classmethod
     def from_dict(cls, d: dict) -> "PrecisionSchedule":
         def ovr(v):
-            return config_from_dict(v) if isinstance(v, dict) else v
+            # Dicts are either serialized HBFPConfigs (kind == "hbfp") or
+            # {"m", "b"} axis overrides, which pass through verbatim.
+            if isinstance(v, dict) and v.get("kind") == "hbfp":
+                return config_from_dict(v)
+            return v
         return cls(
             segments=tuple((int(s), config_from_dict(c))
                            for s, c in d["segments"]),

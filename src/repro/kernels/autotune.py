@@ -8,7 +8,7 @@ favors MXU-aligned VMEM-resident tiles). This module provides:
   * `candidates(M, K, N)` — the search space: a power-of-two tile menu
     clipped to the problem, filtered by a double-buffered VMEM estimate;
   * `TuningTable` — a persisted on-disk JSON table mapping
-    `op/MxKxN/dtype/m<bits>` keys to the winning tiles + timings;
+    `op/MxKxN/dtype/m<bits>/b<block>` keys to the winning tiles + timings;
   * `lookup(op, M, K, N, ...)` — the trace-time entry point `ops.py` and
     `kernels/linear.py` call when no explicit tiles are given: returns the
     tuned tiles when the table has the shape, else DEFAULT_TILES clipped;
@@ -47,16 +47,30 @@ def table_path() -> str:
 
 
 def cache_key(op: str, M: int, K: int, N: int, dtype: str,
-              mantissa_bits: int) -> str:
-    """Table key: one entry per (op, logical shape, dtype, mantissa width).
-    The shape is the *logical* (M, K, N) of the GEMM — padding to tile
-    multiples happens downstream and depends on the chosen tiles."""
-    return f"{op}/{M}x{K}x{N}/{dtype}/m{mantissa_bits}"
+              mantissa_bits: int, block: int = 0) -> str:
+    """Table key: one entry per (op, logical shape, dtype, mantissa width,
+    exponent-block size). The shape is the *logical* (M, K, N) of the GEMM —
+    padding to tile multiples happens downstream and depends on the chosen
+    tiles. `block` is the schedulable BFP block size (DESIGN.md §13);
+    0 is the default whole-tile granularity. It changes the kernel dataflow
+    (sub-block scales force the dequantize-in-VMEM path), so tuned tiles
+    are not transferable across block sizes."""
+    return f"{op}/{M}x{K}x{N}/{dtype}/m{mantissa_bits}/b{int(block)}"
 
 
 def clip_tiles(tiles: Iterable[int], M: int, K: int, N: int) -> Tiles:
     bm, bk, bn = tiles
     return (min(int(bm), M), min(int(bk), K), min(int(bn), N))
+
+
+def align_tiles(tiles: Iterable[int], block: int) -> Tiles:
+    """Round each tile edge up to a multiple of the exponent-block size so
+    sub-block groups divide the kernel tile exactly (pad-and-slice covers
+    the overhang; zero padding quantizes to zero). block=0 ⇒ unchanged."""
+    if not block:
+        return tuple(int(t) for t in tiles)
+    b = int(block)
+    return tuple(-(-int(t) // b) * b for t in tiles)
 
 
 def vmem_bytes(bm: int, bk: int, bn: int, itemsize: int = 4) -> int:
@@ -146,11 +160,11 @@ def invalidate_cache() -> None:
 
 
 def lookup(op: str, M: int, K: int, N: int, *, dtype: str = "float32",
-           mantissa_bits: int = 8) -> Tiles:
+           mantissa_bits: int = 8, block: int = 0) -> Tiles:
     """Trace-time tile resolution: tuned tiles if the table has this
-    (op, shape, dtype, m) cell, else DEFAULT_TILES — always clipped to the
-    problem so small shapes stay single-block."""
-    t = get_table().get(cache_key(op, M, K, N, dtype, mantissa_bits))
+    (op, shape, dtype, m, b) cell, else DEFAULT_TILES — always clipped to
+    the problem so small shapes stay single-block."""
+    t = get_table().get(cache_key(op, M, K, N, dtype, mantissa_bits, block))
     return clip_tiles(t or DEFAULT_TILES, M, K, N)
 
 
@@ -165,6 +179,7 @@ def _time_us(fn, n: int = 3, warmup: int = 1) -> float:
 
 def autotune_op(op: str, run_fn, M: int, K: int, N: int, *,
                 dtype: str = "float32", mantissa_bits: int = 8,
+                block: int = 0,
                 table: Optional[TuningTable] = None,
                 menu: Tuple[int, ...] = TILE_MENU,
                 n: int = 3, save: bool = True, log=None,
@@ -183,7 +198,7 @@ def autotune_op(op: str, run_fn, M: int, K: int, N: int, *,
     default = clip_tiles(DEFAULT_TILES, M, K, N)
     if default not in cands:
         cands = (default,) + cands
-    key = cache_key(op, M, K, N, dtype, mantissa_bits)
+    key = cache_key(op, M, K, N, dtype, mantissa_bits, block)
     rec.emit("autotune/search", op=op, key=key, shape=[M, K, N],
              n_candidates=len(cands), n=n)
     timings = {}

@@ -42,14 +42,22 @@ ROLE_STREAM_SALT = {
 }
 
 
-def role_stream_salt(role: str, m_bits: int, base_bits: int) -> int:
+def role_stream_salt(role: str, m_bits: int, base_bits: int,
+                     block: int = 0, base_block: int = 0) -> int:
     """Seed salt for quantizing one operand in GEMM role `role` at width
-    `m_bits` when the policy's base (fwd) width is `base_bits`. 0 ⇒ use the
-    unsalted stream (identical draws to the fwd quantization of the same
-    tensor); nonzero ⇒ a disjoint counter stream for this (role, width)."""
-    if m_bits == base_bits:
+    `m_bits` / exponent-block size `block` when the policy's base (fwd)
+    format is (`base_bits`, `base_block`). 0 ⇒ use the unsalted stream
+    (identical draws to the fwd quantization of the same tensor); nonzero
+    ⇒ a disjoint counter stream for this (role, width, block). A diverged
+    block size salts even at the base width — a tensor re-quantized at a
+    different block granularity must not consume another site's draws
+    (DESIGN.md §13, the same hazard PR 4 fixed for role widths)."""
+    if m_bits == base_bits and int(block) == int(base_block):
         return 0
-    return (ROLE_STREAM_SALT[role] ^ (m_bits * 0x9E3779B9)) & 0x7FFFFFFF
+    salt = ROLE_STREAM_SALT[role] ^ (m_bits * 0x9E3779B9)
+    if int(block) != int(base_block):
+        salt ^= (int(block) + 1) * 0x85EBCA6B  # murmur3 c1
+    return salt & 0x7FFFFFFF
 
 
 def max_exponent(amax: jax.Array) -> jax.Array:
@@ -83,6 +91,41 @@ def pow2(e):
     """Exact 2^e via IEEE-754 bit construction (see core.bfp.pow2)."""
     bits = (e.astype(jnp.int32) + 127) << 23
     return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def row_group_amax(x, block: int):
+    """Per-row |x| max over `block`-sized groups of the last axis — the
+    activation/gradient exponent granularity inside one kernel tile
+    (DESIGN.md §13). block=0 (or ≥ the row length) ⇒ one amax per whole
+    row, today's per-row-block exponent. Groups clamp to the row length
+    exactly like `bfp._tile_view` clamps tile dims, so the kernel matches
+    the sim backend bit-for-bit on aligned shapes. Returns an array
+    broadcastable against x."""
+    a = jnp.abs(x)
+    r, c = x.shape
+    if not block or block >= c:
+        return a.max(axis=1, keepdims=True)
+    if c % block:
+        raise ValueError(f"block {block} must divide the tile K edge {c}")
+    g = a.reshape(r, c // block, block).max(axis=2, keepdims=True)
+    return jnp.broadcast_to(g, (r, c // block, block)).reshape(r, c)
+
+
+def tile_group_amax(w, block: int):
+    """|w| max over (block, block) sub-tiles of one 2-D kernel tile — the
+    weight exponent granularity (DESIGN.md §13). block=0 ⇒ one amax for
+    the whole tile (today's semantics); block clamps per-dim to the tile
+    edges like `bfp._tile_view`. Returns an array broadcastable against
+    w."""
+    a = jnp.abs(w)
+    if not block:
+        return a.max()
+    r, c = w.shape
+    rb, cb = min(block, r), min(block, c)
+    if r % rb or c % cb:
+        raise ValueError(f"block {block} must divide tile edges {(r, c)}")
+    g = a.reshape(r // rb, rb, c // cb, cb).max(axis=(1, 3), keepdims=True)
+    return jnp.broadcast_to(g, (r // rb, rb, c // cb, cb)).reshape(r, c)
 
 
 def quantize_block(x, mantissa_bits: int, amax, *, stochastic: bool,

@@ -61,7 +61,7 @@ def _qdot(a, b, m_bits):
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest,
-                  m_bits, bq, bk, hd, n_k, scale, causal, with_lse):
+                  m_qk, m_pv, bq, bk, hd, n_k, scale, causal, with_lse):
     if with_lse:
         lse_ref, m_ref, l_ref, acc_ref = rest
     else:
@@ -83,12 +83,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest,
         q = q_ref[0].astype(jnp.float32) * scale        # [bq, hd]
         k = k_ref[0].astype(jnp.float32)                # [bk, hd]
         v = v_ref[0].astype(jnp.float32)                # [bk, hd]
-        # BFP: one exponent per q-row / k-row over hd (act semantics)
-        qq, dq = quantize_block(q, m_bits, jnp.abs(q).max(1, keepdims=True),
+        # BFP: one exponent per q-row / k-row over hd (act semantics);
+        # QK-side operands at m_qk, PV-side at m_pv (per-role widths,
+        # DESIGN.md §11 — attn_qk/attn_pv policies run on this fast path)
+        qq, dq = quantize_block(q, m_qk, jnp.abs(q).max(1, keepdims=True),
                                 stochastic=False)
-        kq, dk = quantize_block(k, m_bits, jnp.abs(k).max(1, keepdims=True),
+        kq, dk = quantize_block(k, m_qk, jnp.abs(k).max(1, keepdims=True),
                                 stochastic=False)
-        s = _qdot(qq, kq.T, m_bits) * (dq * dk.T)       # [bq, bk] f32
+        s = _qdot(qq, kq.T, m_qk) * (dq * dk.T)         # [bq, bk] f32
         if causal:
             qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32,
                                                       (bq, bk), 0)
@@ -102,12 +104,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest,
         p = jnp.exp(s - m_new)                          # [bq, bk]
         l_ref[...] = l_ref[...] * alpha + p.sum(1, keepdims=True)
         # PV in BFP: probs per row over bk, v per column over bk
-        pq, dp = quantize_block(p, m_bits, jnp.abs(p).max(1, keepdims=True),
+        pq, dp = quantize_block(p, m_pv, jnp.abs(p).max(1, keepdims=True),
                                 stochastic=False)
-        vq, dv = quantize_block(v, m_bits,
+        vq, dv = quantize_block(v, m_pv,
                                 jnp.abs(v).max(0, keepdims=True),
                                 stochastic=False)
-        pv = _qdot(pq, vq, m_bits) * (dp * dv)          # [bq, hd]
+        pv = _qdot(pq, vq, m_pv) * (dp * dv)            # [bq, hd]
         acc_ref[...] = acc_ref[...] * alpha + pv
         m_ref[...] = m_new
 
@@ -120,20 +122,25 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *rest,
                              jnp.log(jnp.maximum(l_ref[...], 1e-30)))[:, 0]
 
 
-@functools.partial(jax.jit, static_argnames=("m_bits", "bq", "bk", "causal",
+@functools.partial(jax.jit, static_argnames=("m_bits", "m_qk", "m_pv",
+                                             "bq", "bk", "causal",
                                              "with_lse", "interpret"))
-def hbfp_flash_attention(q, k, v, *, m_bits: int = 8, bq: int = 128,
+def hbfp_flash_attention(q, k, v, *, m_bits: int = 8, m_qk: int = 0,
+                         m_pv: int = 0, bq: int = 128,
                          bk: int = 128, causal: bool = True,
                          with_lse: bool = False, interpret: bool = False):
     """q,k,v: [BH, S, hd] (flattened batch×heads). Returns [BH, S, hd], or
     (out, lse [BH, S] f32) when with_lse — the per-row logsumexp of the
-    scaled BFP scores, saved by the custom VJP for the backward pass."""
+    scaled BFP scores, saved by the custom VJP for the backward pass.
+    m_qk/m_pv (0 ⇒ m_bits) run the QK^T and PV contractions at their own
+    mantissa widths (per-role attention policies, DESIGN.md §11)."""
     BH, S, hd = q.shape
     bq, bk = min(bq, S), min(bk, S)
     assert S % bq == 0 and S % bk == 0, (S, bq, bk)
     n_k = S // bk
     scale = 1.0 / (hd ** 0.5)
-    kernel = functools.partial(_flash_kernel, m_bits=m_bits, bq=bq, bk=bk,
+    kernel = functools.partial(_flash_kernel, m_qk=m_qk or m_bits,
+                               m_pv=m_pv or m_bits, bq=bq, bk=bk,
                                hd=hd, n_k=n_k, scale=scale, causal=causal,
                                with_lse=with_lse)
     out_shape = jax.ShapeDtypeStruct((BH, S, hd), q.dtype)
@@ -162,14 +169,14 @@ def hbfp_flash_attention(q, k, v, *, m_bits: int = 8, bq: int = 128,
 # Backward kernels (two-pass flash backward, all dot products BFP)
 # ----------------------------------------------------------------------------
 
-def _recompute_p(q, k, lse, qb, kb, m_bits, bq, bk, scale, causal):
+def _recompute_p(q, k, lse, qb, kb, m_qk, bq, bk, scale, causal):
     """Shared by both backward kernels: re-quantize q·α and k exactly as the
-    forward did (idempotent) and rebuild p = exp(s − lse)."""
-    qq, dq = quantize_block(q, m_bits, jnp.abs(q).max(1, keepdims=True),
+    forward did (idempotent, at the QK width) and rebuild p = exp(s − lse)."""
+    qq, dq = quantize_block(q, m_qk, jnp.abs(q).max(1, keepdims=True),
                             stochastic=False)
-    kq, dk = quantize_block(k, m_bits, jnp.abs(k).max(1, keepdims=True),
+    kq, dk = quantize_block(k, m_qk, jnp.abs(k).max(1, keepdims=True),
                             stochastic=False)
-    s = _qdot(qq, kq.T, m_bits) * (dq * dk.T)           # [bq, bk]
+    s = _qdot(qq, kq.T, m_qk) * (dq * dk.T)             # [bq, bk]
     if causal:
         qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
@@ -187,16 +194,16 @@ def _bfp_rows(x, m_bits):
     return q, d
 
 
-def _dsoft(p, do_q, do_d, v, delta, m_bits):
-    """dp = Q(do)·Q(v)^T (int8 path — row scales factor per output cell),
-    then ds = p ∘ (dp − D)."""
-    vq, dv = _bfp_rows(v, m_bits)
-    dp = _qdot(do_q, vq.T, m_bits) * (do_d * dv.T)      # [bq, bk]
+def _dsoft(p, do_q, do_d, v, delta, m_pv):
+    """dp = Q(do)·Q(v)^T (int8 path — row scales factor per output cell;
+    PV-side operands at the PV width), then ds = p ∘ (dp − D)."""
+    vq, dv = _bfp_rows(v, m_pv)
+    dp = _qdot(do_q, vq.T, m_pv) * (do_d * dv.T)        # [bq, bk]
     return p * (dp - delta[:, None])
 
 
 def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                     dq_ref, acc_ref, *, m_bits, bq, bk, hd, n_k, scale,
+                     dq_ref, acc_ref, *, m_qk, m_pv, bq, bk, hd, n_k, scale,
                      causal):
     kb = pl.program_id(2)
 
@@ -215,12 +222,13 @@ def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         do = do_ref[0].astype(jnp.float32)
         lse = lse_ref[0]
         delta = delta_ref[0]
-        p, _, (kq, dk) = _recompute_p(q, k, lse, qb, kb, m_bits, bq, bk,
+        p, _, (kq, dk) = _recompute_p(q, k, lse, qb, kb, m_qk, bq, bk,
                                       scale, causal)
-        do_q, do_d = _bfp_rows(do, m_bits)
-        ds = _dsoft(p, do_q, do_d, v, delta, m_bits)
-        # dq += Q(ds)·k̂ · α — k̂'s per-row scales ride the contraction
-        ds_q, ds_d = _bfp_rows(ds, m_bits)
+        do_q, do_d = _bfp_rows(do, m_pv)
+        ds = _dsoft(p, do_q, do_d, v, delta, m_pv)
+        # dq += Q(ds)·k̂ · α — k̂'s per-row scales ride the contraction;
+        # ds is a QK-GEMM gradient operand ⇒ QK width
+        ds_q, ds_d = _bfp_rows(ds, m_qk)
         acc_ref[...] += jax.lax.dot_general(
             ds_q * ds_d, kq * dk, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32) * scale
@@ -231,7 +239,7 @@ def _flash_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 
 
 def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
-                      dk_ref, dv_ref, dk_acc, dv_acc, *, m_bits, bq, bk,
+                      dk_ref, dv_ref, dk_acc, dv_acc, *, m_qk, m_pv, bq, bk,
                       hd, n_q, scale, causal):
     qb = pl.program_id(2)
 
@@ -251,18 +259,20 @@ def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         do = do_ref[0].astype(jnp.float32)
         lse = lse_ref[0]
         delta = delta_ref[0]
-        p, (qq, dq), _ = _recompute_p(q, k, lse, qb, kb, m_bits, bq, bk,
+        p, (qq, dq), _ = _recompute_p(q, k, lse, qb, kb, m_qk, bq, bk,
                                       scale, causal)
-        do_q, do_d = _bfp_rows(do, m_bits)
+        do_q, do_d = _bfp_rows(do, m_pv)
         # dv += Q(p)^T·Q(do) — p re-quantized per q-row exactly like the
-        # forward's PV operand; scales ride the q contraction ⇒ f32 path
-        p_q, p_d = _bfp_rows(p, m_bits)
+        # forward's PV operand (PV width); scales ride the q contraction
+        # ⇒ f32 path
+        p_q, p_d = _bfp_rows(p, m_pv)
         dv_acc[...] += jax.lax.dot_general(
             p_q * p_d, do_q * do_d, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
-        ds = _dsoft(p, do_q, do_d, v, delta, m_bits)
-        # dk += Q(ds)^T·q̂ (q̂ carries the α scaling from the forward)
-        ds_q, ds_d = _bfp_rows(ds, m_bits)
+        ds = _dsoft(p, do_q, do_d, v, delta, m_pv)
+        # dk += Q(ds)^T·q̂ (q̂ carries the α scaling from the forward);
+        # QK-GEMM gradient operand ⇒ QK width
+        ds_q, ds_d = _bfp_rows(ds, m_qk)
         dk_acc[...] += jax.lax.dot_general(
             ds_q * ds_d, qq * dq, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -273,9 +283,11 @@ def _flash_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         dv_ref[0] = dv_acc[...].astype(dv_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("m_bits", "bq", "bk", "causal",
+@functools.partial(jax.jit, static_argnames=("m_bits", "m_qk", "m_pv",
+                                             "bq", "bk", "causal",
                                              "interpret"))
 def hbfp_flash_attention_bwd(q, k, v, o, lse, do, *, m_bits: int = 8,
+                             m_qk: int = 0, m_pv: int = 0,
                              bq: int = 128, bk: int = 128,
                              causal: bool = True, interpret: bool = False):
     """Fused BFP flash-attention backward: returns (dq, dk, dv), each
@@ -295,7 +307,8 @@ def hbfp_flash_attention_bwd(q, k, v, o, lse, do, *, m_bits: int = 8,
         pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),          # delta
     ]
     dq = pl.pallas_call(
-        functools.partial(_flash_dq_kernel, m_bits=m_bits, bq=bq, bk=bk,
+        functools.partial(_flash_dq_kernel, m_qk=m_qk or m_bits,
+                          m_pv=m_pv or m_bits, bq=bq, bk=bk,
                           hd=hd, n_k=S // bk, scale=scale, causal=causal),
         grid=(BH, S // bq, S // bk),
         in_specs=specs,
@@ -314,7 +327,8 @@ def hbfp_flash_attention_bwd(q, k, v, o, lse, do, *, m_bits: int = 8,
         pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),          # delta
     ]
     dk, dv = pl.pallas_call(
-        functools.partial(_flash_dkv_kernel, m_bits=m_bits, bq=bq, bk=bk,
+        functools.partial(_flash_dkv_kernel, m_qk=m_qk or m_bits,
+                          m_pv=m_pv or m_bits, bq=bq, bk=bk,
                           hd=hd, n_q=S // bq, scale=scale, causal=causal),
         grid=(BH, S // bk, S // bq),
         in_specs=specs_kv,
@@ -334,23 +348,30 @@ def hbfp_flash_attention_bwd(q, k, v, o, lse, do, *, m_bits: int = 8,
 # ----------------------------------------------------------------------------
 
 class FlashSpec(NamedTuple):
-    """Static flash-attention kernel configuration."""
+    """Static flash-attention kernel configuration. `m_qk`/`m_pv` (0 ⇒
+    m_bits) are the per-role widths of the two attention contractions —
+    attn_qk/attn_pv policies run on the fused path instead of falling back
+    to the sim oracle (DESIGN.md §11)."""
     m_bits: int
     bq: int
     bk: int
     causal: bool
     interpret: bool
+    m_qk: int = 0
+    m_pv: int = 0
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def flash_attention_vjp(spec: FlashSpec, q, k, v):
-    return hbfp_flash_attention(q, k, v, m_bits=spec.m_bits, bq=spec.bq,
+    return hbfp_flash_attention(q, k, v, m_bits=spec.m_bits,
+                                m_qk=spec.m_qk, m_pv=spec.m_pv, bq=spec.bq,
                                 bk=spec.bk, causal=spec.causal,
                                 interpret=spec.interpret)
 
 
 def _flash_fwd(spec, q, k, v):
-    o, lse = hbfp_flash_attention(q, k, v, m_bits=spec.m_bits, bq=spec.bq,
+    o, lse = hbfp_flash_attention(q, k, v, m_bits=spec.m_bits,
+                                  m_qk=spec.m_qk, m_pv=spec.m_pv, bq=spec.bq,
                                   bk=spec.bk, causal=spec.causal,
                                   with_lse=True, interpret=spec.interpret)
     return o, (q, k, v, o, lse)
@@ -359,7 +380,8 @@ def _flash_fwd(spec, q, k, v):
 def _flash_bwd(spec, res, do):
     q, k, v, o, lse = res
     dq, dk, dv = hbfp_flash_attention_bwd(
-        q, k, v, o, lse, do, m_bits=spec.m_bits, bq=spec.bq, bk=spec.bk,
+        q, k, v, o, lse, do, m_bits=spec.m_bits, m_qk=spec.m_qk,
+        m_pv=spec.m_pv, bq=spec.bq, bk=spec.bk,
         causal=spec.causal, interpret=spec.interpret)
     return dq, dk, dv
 

@@ -47,12 +47,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.common import (STREAM_G, STREAM_W, STREAM_X,
-                                  quantize_block)
+                                  quantize_block, row_group_amax,
+                                  tile_group_amax)
 
 
 def _matmul_kernel(x_ref, w_ref, seed_ref, o_ref, acc_ref, *,
-                   mantissa_bits, stochastic, quantize_w, bm, bk, bn,
-                   n_k, K, N):
+                   mantissa_bits, stochastic, quantize_w, block, bm, bk,
+                   bn, n_k, K, N):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -74,36 +75,58 @@ def _matmul_kernel(x_ref, w_ref, seed_ref, o_ref, acc_ref, *,
         # offset w indices so x and w never share a stream position
         idx_w = (k * bk + rw) * N + (j * bn + cw) + jnp.int32(STREAM_W)
 
-    # activation: one exponent per row of the K-block
-    ax = jnp.abs(x).max(axis=1, keepdims=True)
+    # activation: one exponent per row per block-group of the K-block
+    # (block=0, or ≥ bk, ⇒ the whole row — today's semantics); δx then
+    # varies along the contraction iff the group is finer than bk
+    x_sub = bool(block) and block < bk
+    w_sub = bool(block) and (block < bk or block < bn)
+    ax = row_group_amax(x, block)
     qx, dx = quantize_block(x, mantissa_bits, ax, stochastic=stochastic,
                             seed=seed, idx=idx_x)
     if not quantize_w:
         # w is already narrow BFP (per-layer widths resolved by the
-        # optimizer shell): y += (Qx·δx) @ w, δx factors out per row
-        part = jax.lax.dot_general(
-            qx, w, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        acc_ref[...] += part * dx
+        # optimizer shell): y += (Qx·δx) @ w; δx factors out per row
+        # unless sub-row groups make it ride the contraction
+        if x_sub:
+            part = jax.lax.dot_general(
+                qx * dx, w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc_ref[...] += part
+        else:
+            part = jax.lax.dot_general(
+                qx, w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc_ref[...] += part * dx
     else:
-        # weight: one exponent per (bk, bn) tile
-        aw = jnp.abs(w).max()
+        # weight: one exponent per (block, block) sub-tile; block=0 or ≥
+        # both tile edges ⇒ one exponent per (bk, bn) tile (the kernel's
+        # coarsest granularity — b clamps to the tile, DESIGN.md §13)
+        aw = tile_group_amax(w, block if w_sub else 0)
         qw, dw = quantize_block(w, mantissa_bits, aw, stochastic=stochastic,
                                 seed=seed, idx=idx_w)
-        if mantissa_bits <= 8:
-            # fixed-point path: int8 mantissas on the MXU, exact int32
-            # accumulate
+        if x_sub or w_sub:
+            # sub-block exponents: the scales vary inside the tile, so
+            # mantissas dequantize in VMEM (exact in f32 for m ≤ 12) and
+            # contract on the f32 MXU — the wgrad dataflow
             part = jax.lax.dot_general(
-                qx.astype(jnp.int8), qw.astype(jnp.int8),
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32).astype(jnp.float32)
-        else:
-            # 12/16-bit mantissas: f32 MXU products of integral values are
-            # exact
-            part = jax.lax.dot_general(
-                qx, qw, (((1,), (0,)), ((), ())),
+                qx * dx, qw * dw, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
-        acc_ref[...] += part * (dx * dw)        # δx [bm,1] · δw scalar
+            acc_ref[...] += part
+        else:
+            if mantissa_bits <= 8:
+                # fixed-point path: int8 mantissas on the MXU, exact int32
+                # accumulate
+                part = jax.lax.dot_general(
+                    qx.astype(jnp.int8), qw.astype(jnp.int8),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32).astype(jnp.float32)
+            else:
+                # 12/16-bit mantissas: f32 MXU products of integral values
+                # are exact
+                part = jax.lax.dot_general(
+                    qx, qw, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            acc_ref[...] += part * (dx * dw)    # δx [bm,1] · δw scalar
 
     @pl.when(k == n_k - 1)
     def _done():
@@ -111,10 +134,12 @@ def _matmul_kernel(x_ref, w_ref, seed_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("mantissa_bits", "stochastic",
-                                             "quantize_w", "bm", "bk", "bn",
+                                             "quantize_w", "block",
+                                             "bm", "bk", "bn",
                                              "interpret", "out_dtype"))
 def hbfp_matmul_pallas(x, w, seed=None, *, mantissa_bits: int = 8,
                        stochastic: bool = False, quantize_w: bool = True,
+                       block: int = 0,
                        bm: int = 128, bk: int = 128, bn: int = 128,
                        out_dtype=jnp.float32, interpret: bool = False):
     """Fused quantize+matmul. x: [M, K] f32/bf16, w: [K, N]. Shapes must be
@@ -136,7 +161,8 @@ def hbfp_matmul_pallas(x, w, seed=None, *, mantissa_bits: int = 8,
     n_k = K // bk
     kernel = functools.partial(_matmul_kernel, mantissa_bits=mantissa_bits,
                                stochastic=stochastic, quantize_w=quantize_w,
-                               bm=bm, bk=bk, bn=bn, n_k=n_k, K=K, N=N)
+                               block=block, bm=bm, bk=bk, bn=bn, n_k=n_k,
+                               K=K, N=N)
     return pl.pallas_call(
         kernel,
         grid=(M // bm, N // bn, n_k),
@@ -159,8 +185,8 @@ def hbfp_matmul_pallas(x, w, seed=None, *, mantissa_bits: int = 8,
 # ----------------------------------------------------------------------------
 
 def _dgrad_kernel(g_ref, w_ref, seed_ref, o_ref, acc_ref, *,
-                  mantissa_bits, stochastic, quantize_w, bm, bk, bn,
-                  n_n, K, N):
+                  mantissa_bits, stochastic, quantize_w, block, bm, bk,
+                  bn, n_n, K, N):
     n = pl.program_id(2)
 
     @pl.when(n == 0)
@@ -183,29 +209,46 @@ def _dgrad_kernel(g_ref, w_ref, seed_ref, o_ref, acc_ref, *,
         # matching tile partition re-quantizes w to identical draws
         idx_w = (j * bk + rw) * N + (n * bn + cw) + jnp.int32(STREAM_W)
 
-    # gradient: activation semantics — one exponent per row of the N-block
-    ag = jnp.abs(g).max(axis=1, keepdims=True)
+    # gradient: activation semantics — one exponent per row per
+    # block-group of the N-block (block=0 or ≥ bn ⇒ the whole row)
+    g_sub = bool(block) and block < bn
+    w_sub = bool(block) and (block < bk or block < bn)
+    ag = row_group_amax(g, block)
     qg, dg = quantize_block(g, mantissa_bits, ag, stochastic=stochastic,
                             seed=seed, idx=idx_g)
     if not quantize_w:
-        part = jax.lax.dot_general(
-            qg, w, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        acc_ref[...] += part * dg
+        if g_sub:
+            part = jax.lax.dot_general(
+                qg * dg, w, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc_ref[...] += part
+        else:
+            part = jax.lax.dot_general(
+                qg, w, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc_ref[...] += part * dg
     else:
-        aw = jnp.abs(w).max()
+        aw = tile_group_amax(w, block if w_sub else 0)
         qw, dw = quantize_block(w, mantissa_bits, aw, stochastic=stochastic,
                                 seed=seed, idx=idx_w)
-        if mantissa_bits <= 8:
+        if g_sub or w_sub:
+            # sub-block exponents ride the contraction: dequantize in
+            # VMEM, f32 MXU (see the forward kernel)
+            part = jax.lax.dot_general(
+                qg * dg, qw * dw, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc_ref[...] += part
+        elif mantissa_bits <= 8:
             part = jax.lax.dot_general(
                 qg.astype(jnp.int8), qw.astype(jnp.int8),
                 (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.int32).astype(jnp.float32)
+            acc_ref[...] += part * (dg * dw)
         else:
             part = jax.lax.dot_general(
                 qg, qw, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32)
-        acc_ref[...] += part * (dg * dw)
+            acc_ref[...] += part * (dg * dw)
 
     @pl.when(n == n_n - 1)
     def _done():
@@ -213,10 +256,12 @@ def _dgrad_kernel(g_ref, w_ref, seed_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("mantissa_bits", "stochastic",
-                                             "quantize_w", "bm", "bk", "bn",
+                                             "quantize_w", "block",
+                                             "bm", "bk", "bn",
                                              "interpret", "out_dtype"))
 def hbfp_dgrad_pallas(g, w, seed=None, *, mantissa_bits: int = 8,
                       stochastic: bool = False, quantize_w: bool = True,
+                      block: int = 0,
                       bm: int = 128, bk: int = 128, bn: int = 128,
                       out_dtype=jnp.float32, interpret: bool = False):
     """dx[M,K] = Q(g)[M,N] · Q(w)[K,N]^T. Tiles: bm over M (dx rows), bk
@@ -233,7 +278,8 @@ def hbfp_dgrad_pallas(g, w, seed=None, *, mantissa_bits: int = 8,
     n_n = N // bn
     kernel = functools.partial(_dgrad_kernel, mantissa_bits=mantissa_bits,
                                stochastic=stochastic, quantize_w=quantize_w,
-                               bm=bm, bk=bk, bn=bn, n_n=n_n, K=K, N=N)
+                               block=block, bm=bm, bk=bk, bn=bn, n_n=n_n,
+                               K=K, N=N)
     return pl.pallas_call(
         kernel,
         grid=(M // bm, K // bk, n_n),
@@ -258,7 +304,7 @@ def hbfp_dgrad_pallas(g, w, seed=None, *, mantissa_bits: int = 8,
 # ----------------------------------------------------------------------------
 
 def _wgrad_kernel(x_ref, g_ref, seed_ref, o_ref, acc_ref, *,
-                  mantissa_bits, stochastic, bm, bk, bn, n_m, K, N):
+                  mantissa_bits, stochastic, block, bm, bk, bn, n_m, K, N):
     m = pl.program_id(2)
 
     @pl.when(m == 0)
@@ -281,10 +327,12 @@ def _wgrad_kernel(x_ref, g_ref, seed_ref, o_ref, acc_ref, *,
         cg = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
         idx_g = (m * bm + rg) * N + (j * bn + cg) + jnp.int32(STREAM_G)
 
-    ax = jnp.abs(x).max(axis=1, keepdims=True)
+    # per-token exponents, optionally refined to block-groups of the
+    # feature axis (block=0 ⇒ the whole row — today's semantics)
+    ax = row_group_amax(x, block)
     qx, dx = quantize_block(x, mantissa_bits, ax, stochastic=stochastic,
                             seed=seed, idx=idx_x)
-    ag = jnp.abs(g).max(axis=1, keepdims=True)
+    ag = row_group_amax(g, block)
     qg, dg = quantize_block(g, mantissa_bits, ag, stochastic=stochastic,
                             seed=seed, idx=idx_g)
     # dequantize in VMEM: per-token scales ride the contraction axis
@@ -299,10 +347,10 @@ def _wgrad_kernel(x_ref, g_ref, seed_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("mantissa_bits", "stochastic",
-                                             "bm", "bk", "bn", "interpret",
-                                             "out_dtype"))
+                                             "block", "bm", "bk", "bn",
+                                             "interpret", "out_dtype"))
 def hbfp_wgrad_pallas(x, g, seed=None, *, mantissa_bits: int = 8,
-                      stochastic: bool = False,
+                      stochastic: bool = False, block: int = 0,
                       bm: int = 128, bk: int = 128, bn: int = 128,
                       out_dtype=jnp.float32, interpret: bool = False):
     """dw[K,N] = Q(x)[M,K]^T · Q(g)[M,N]. Tiles: bk over K (dw rows), bn
@@ -318,8 +366,8 @@ def hbfp_wgrad_pallas(x, g, seed=None, *, mantissa_bits: int = 8,
         seed = jnp.zeros((1, 1), jnp.int32)
     n_m = M // bm
     kernel = functools.partial(_wgrad_kernel, mantissa_bits=mantissa_bits,
-                               stochastic=stochastic, bm=bm, bk=bk, bn=bn,
-                               n_m=n_m, K=K, N=N)
+                               stochastic=stochastic, block=block,
+                               bm=bm, bk=bk, bn=bn, n_m=n_m, K=K, N=N)
     return pl.pallas_call(
         kernel,
         grid=(K // bk, N // bn, n_m),

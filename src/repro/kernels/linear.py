@@ -50,6 +50,7 @@ class KernelSpec(NamedTuple):
     wgrad: Tuple[int, int, int]   # (bm, bk, bn): M-contraction/K/N tiles
     m_dgrad: int = 0              # 0 ⇒ mantissa_bits
     m_wgrad: int = 0
+    block: int = 0                # exponent-block size; 0 ⇒ whole tile
 
 
 def _pad2(a, mr, mc):
@@ -66,11 +67,12 @@ def _zero_cotangent(x):
 def _fwd_impl(spec: KernelSpec, x2, w, seed):
     M, K = x2.shape
     N = w.shape[1]
-    bm, bk, bn = autotune.clip_tiles(spec.fwd, M, K, N)
+    bm, bk, bn = autotune.align_tiles(
+        autotune.clip_tiles(spec.fwd, M, K, N), spec.block)
     y = hbfp_matmul_pallas(
         _pad2(x2, bm, bk), _pad2(w, bk, bn), seed,
         mantissa_bits=spec.mantissa_bits, stochastic=spec.stochastic,
-        quantize_w=spec.quantize_w, bm=bm, bk=bk, bn=bn,
+        quantize_w=spec.quantize_w, block=spec.block, bm=bm, bk=bk, bn=bn,
         interpret=ops.INTERPRET)
     return y[:M, :N].astype(x2.dtype)
 
@@ -84,12 +86,14 @@ def _vjp_fwd(spec, x2, w, seed):
     return _fwd_impl(spec, x2, w, seed), (x2, w, seed)
 
 
-def _role_seed(seed, role: str, m_bits: int, base_bits: int):
-    """Seed for one backward GEMM: unsalted at the fwd width (the kernels'
-    element-index streams replay the forward's draws), xor-salted when the
-    role runs at its own width so it never consumes another role's stream
-    (kernels/common.py role_stream_salt; pinned by test)."""
-    salt = role_stream_salt(role, m_bits, base_bits)
+def _role_seed(seed, role: str, m_bits: int, base_bits: int,
+               block: int = 0, base_block: int = 0):
+    """Seed for one backward GEMM: unsalted at the fwd width + block (the
+    kernels' element-index streams replay the forward's draws), xor-salted
+    when the role runs at its own width or exponent-block size so it never
+    consumes another role's stream (kernels/common.py role_stream_salt;
+    pinned by test)."""
+    salt = role_stream_salt(role, m_bits, base_bits, block, base_block)
     return seed if not salt else seed ^ jnp.int32(salt)
 
 
@@ -101,19 +105,23 @@ def _vjp_bwd(spec, res, g):
     m_w = spec.m_wgrad or spec.mantissa_bits
     g = g.astype(jnp.float32)
     # dgrad: dx[M,K] = Q(g)·Q(w)^T, contraction over N
-    bm, bk, bn = autotune.clip_tiles(spec.dgrad, M, K, N)
+    bm, bk, bn = autotune.align_tiles(
+        autotune.clip_tiles(spec.dgrad, M, K, N), spec.block)
     dx = hbfp_dgrad_pallas(
         _pad2(g, bm, bn), _pad2(w, bk, bn),
-        _role_seed(seed, "dgrad", m_d, spec.mantissa_bits),
+        _role_seed(seed, "dgrad", m_d, spec.mantissa_bits,
+                   spec.block, spec.block),
         mantissa_bits=m_d, stochastic=spec.stochastic,
-        quantize_w=spec.quantize_w, bm=bm, bk=bk, bn=bn,
+        quantize_w=spec.quantize_w, block=spec.block, bm=bm, bk=bk, bn=bn,
         interpret=ops.INTERPRET)[:M, :K]
     # wgrad: dw[K,N] = Q(x)^T·Q(g), contraction over the token axis M
-    bm, bk, bn = autotune.clip_tiles(spec.wgrad, M, K, N)
+    bm, bk, bn = autotune.align_tiles(
+        autotune.clip_tiles(spec.wgrad, M, K, N), spec.block)
     dw = hbfp_wgrad_pallas(
         _pad2(x2, bm, bk), _pad2(g, bm, bn),
-        _role_seed(seed, "wgrad", m_w, spec.mantissa_bits),
-        mantissa_bits=m_w, stochastic=spec.stochastic,
+        _role_seed(seed, "wgrad", m_w, spec.mantissa_bits,
+                   spec.block, spec.block),
+        mantissa_bits=m_w, stochastic=spec.stochastic, block=spec.block,
         bm=bm, bk=bk, bn=bn, interpret=ops.INTERPRET)[:K, :N]
     return dx.astype(x2.dtype), dw.astype(w.dtype), _zero_cotangent(seed)
 
@@ -136,21 +144,27 @@ def resolve_spec(cfg, M: int, K: int, N: int,
     the HBFPConfig, per-GEMM tiles from the autotuner table (trace time).
     `dgrad_cfg`/`wgrad_cfg` carry per-role widths (DESIGN.md §11); each
     GEMM's tile lookup is keyed by its own role width, so a "wgrad+2"
-    policy consults the m-matched autotune cells (docs/KERNELS.md)."""
+    policy consults the m-matched autotune cells (docs/KERNELS.md). The
+    config's schedulable block size (`HBFPConfig.act_block`, set by
+    `with_block`; DESIGN.md §13) becomes `KernelSpec.block` and keys every
+    tile lookup — sub-block scales change the kernel dataflow, so tuned
+    tiles don't transfer across block sizes."""
     m_d = (dgrad_cfg or cfg).mantissa_bits
     m_w = (wgrad_cfg or cfg).mantissa_bits
+    block = int(getattr(cfg, "act_block", None) or 0)
     return KernelSpec(
         mantissa_bits=cfg.mantissa_bits,
         stochastic=cfg.rounding == "stochastic",
         quantize_w=cfg.requantize_weights,
         fwd=autotune.lookup("matmul_fwd", M, K, N, dtype=dtype,
-                            mantissa_bits=cfg.mantissa_bits),
+                            mantissa_bits=cfg.mantissa_bits, block=block),
         dgrad=autotune.lookup("matmul_dgrad", M, K, N, dtype=dtype,
-                              mantissa_bits=m_d),
+                              mantissa_bits=m_d, block=block),
         wgrad=autotune.lookup("matmul_wgrad", M, K, N, dtype=dtype,
-                              mantissa_bits=m_w),
+                              mantissa_bits=m_w, block=block),
         m_dgrad=0 if m_d == cfg.mantissa_bits else m_d,
-        m_wgrad=0 if m_w == cfg.mantissa_bits else m_w)
+        m_wgrad=0 if m_w == cfg.mantissa_bits else m_w,
+        block=block)
 
 
 def hbfp_matmul_kernel(x: jax.Array, w: jax.Array, cfg,

@@ -32,10 +32,11 @@ def _pad_to(x, mults):
     return x, False
 
 
-def _tiles(op, bm, bk, bn, M, K, N, mantissa_bits, dtype="float32"):
+def _tiles(op, bm, bk, bn, M, K, N, mantissa_bits, dtype="float32",
+           block=0):
     if bm is None or bk is None or bn is None:
         t = autotune.lookup(op, M, K, N, dtype=dtype,
-                            mantissa_bits=mantissa_bits)
+                            mantissa_bits=mantissa_bits, block=block)
         return (t[0] if bm is None else min(bm, M),
                 t[1] if bk is None else min(bk, K),
                 t[2] if bn is None else min(bn, N))
@@ -69,56 +70,60 @@ def bfp_quantize(x, seed=0, *, mantissa_bits=8, tile=128, stochastic=False,
 
 
 def hbfp_matmul(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
-                quantize_w=True, bm=None, bk=None, bn=None):
+                quantize_w=True, block=0, bm=None, bk=None, bn=None):
     """Fused HBFP matmul for [..., M, K] @ [K, N] (leading dims flattened).
 
-    Pads every dim to the block size (zero rows/cols quantize to zero and
+    Pads every dim to the tile size (zero rows/cols quantize to zero and
     contribute nothing), calls the kernel, slices back. Tiles default to
-    the autotuner table for the logical shape.
+    the autotuner table for the logical shape. `block` (0 ⇒ whole-tile)
+    selects the exponent-block granularity inside each kernel tile
+    (DESIGN.md §13) and keys its own autotune cell.
     """
     lead = x.shape[:-2] if x.ndim > 2 else ()
     M0, K0 = x.shape[-2], x.shape[-1]
     N0 = w.shape[-1]
     x2 = x.reshape(-1, K0)
     bm, bk, bn = _tiles("matmul_fwd", bm, bk, bn, x2.shape[0], K0, N0,
-                        mantissa_bits, str(x.dtype))
+                        mantissa_bits, str(x.dtype), block)
     xp, _ = _pad_to(x2, (bm, bk))
     wp, _ = _pad_to(w, (bk, bn))
     seed_arr = None if seed is None else jnp.full((1, 1), seed, jnp.int32)
     y = hbfp_matmul_pallas(xp, wp, seed_arr, mantissa_bits=mantissa_bits,
                            stochastic=stochastic, quantize_w=quantize_w,
-                           bm=bm, bk=bk, bn=bn, interpret=INTERPRET)
+                           block=block, bm=bm, bk=bk, bn=bn,
+                           interpret=INTERPRET)
     y = y[:x2.shape[0], :N0]
     return y.reshape(*lead, M0, N0)
 
 
 def hbfp_dgrad(g, w, seed=None, *, mantissa_bits=8, stochastic=False,
-               quantize_w=True, bm=None, bk=None, bn=None):
+               quantize_w=True, block=0, bm=None, bk=None, bn=None):
     """Fused dgrad dx[M,K] = Q(g)[M,N]·Q(w)[K,N]^T with pad-and-slice."""
     M0, N0 = g.shape
     K0 = w.shape[0]
     bm, bk, bn = _tiles("matmul_dgrad", bm, bk, bn, M0, K0, N0,
-                        mantissa_bits, str(g.dtype))
+                        mantissa_bits, str(g.dtype), block)
     gp, _ = _pad_to(g, (bm, bn))
     wp, _ = _pad_to(w, (bk, bn))
     seed_arr = None if seed is None else jnp.full((1, 1), seed, jnp.int32)
     dx = hbfp_dgrad_pallas(gp, wp, seed_arr, mantissa_bits=mantissa_bits,
                            stochastic=stochastic, quantize_w=quantize_w,
-                           bm=bm, bk=bk, bn=bn, interpret=INTERPRET)
+                           block=block, bm=bm, bk=bk, bn=bn,
+                           interpret=INTERPRET)
     return dx[:M0, :K0]
 
 
 def hbfp_wgrad(x, g, seed=None, *, mantissa_bits=8, stochastic=False,
-               bm=None, bk=None, bn=None):
+               block=0, bm=None, bk=None, bn=None):
     """Fused wgrad dw[K,N] = Q(x)[M,K]^T·Q(g)[M,N] with pad-and-slice."""
     M0, K0 = x.shape
     N0 = g.shape[1]
     bm, bk, bn = _tiles("matmul_wgrad", bm, bk, bn, M0, K0, N0,
-                        mantissa_bits, str(x.dtype))
+                        mantissa_bits, str(x.dtype), block)
     xp, _ = _pad_to(x, (bm, bk))
     gp, _ = _pad_to(g, (bm, bn))
     seed_arr = None if seed is None else jnp.full((1, 1), seed, jnp.int32)
     dw = hbfp_wgrad_pallas(xp, gp, seed_arr, mantissa_bits=mantissa_bits,
-                           stochastic=stochastic, bm=bm, bk=bk, bn=bn,
-                           interpret=INTERPRET)
+                           stochastic=stochastic, block=block,
+                           bm=bm, bk=bk, bn=bn, interpret=INTERPRET)
     return dw[:K0, :N0]

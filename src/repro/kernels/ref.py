@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.common import (STREAM_G, STREAM_W, STREAM_X,
-                                  quantize_block)
+                                  quantize_block, row_group_amax,
+                                  tile_group_amax)
 
 
 def bfp_quantize_ref(x, seed, *, mantissa_bits=8, tile_r=128, tile_c=128,
@@ -55,15 +56,19 @@ def bfp_quantize_ref(x, seed, *, mantissa_bits=8, tile_r=128, tile_c=128,
 
 
 def hbfp_matmul_ref(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
-                    quantize_w=True, bm=128, bk=128, bn=128,
+                    quantize_w=True, block=0, bm=128, bk=128, bn=128,
                     out_dtype=jnp.float32):
     """Oracle for hbfp_matmul_pallas: per-(row, K-block) activation exponents,
     per-(bk, bn)-tile weight exponents, f32 accumulation across K blocks.
     quantize_w=False mirrors the kernel's pre-narrowed-weight path (raw w,
-    f32 contraction)."""
+    f32 contraction). block>0 refines exponents to per-(row, block-group)
+    for x and (block, block) sub-tiles for w — the kernel's schedulable
+    block size (DESIGN.md §13)."""
     M, K = x.shape
     _, N = w.shape
     bm_, bk_, bn_ = min(bm, M), min(bk, K), min(bn, N)
+    x_sub = bool(block) and block < bk_
+    w_sub = bool(block) and (block < bk_ or block < bn_)
     seed_v = jnp.zeros((), jnp.int32) if seed is None \
         else jnp.asarray(seed).reshape(-1)[0]
     xf = x.astype(jnp.float32)
@@ -72,7 +77,7 @@ def hbfp_matmul_ref(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
     acc = jnp.zeros((M, N), jnp.float32)
     for kk in range(K // bk_):
         xs = xf[:, kk * bk_:(kk + 1) * bk_]                      # [M, bk]
-        ax = jnp.abs(xs).max(axis=1, keepdims=True)
+        ax = row_group_amax(xs, block)
         idx_x = None
         if stochastic:
             r = jax.lax.broadcasted_iota(jnp.int32, (M, bk_), 0)
@@ -83,12 +88,18 @@ def hbfp_matmul_ref(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
         for jj in range(N // bn_):
             ws = wf[kk * bk_:(kk + 1) * bk_, jj * bn_:(jj + 1) * bn_]
             if not quantize_w:
-                part = jax.lax.dot_general(
-                    qx, ws, (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.float32)
-                acc = acc.at[:, jj * bn_:(jj + 1) * bn_].add(part * dx)
+                if x_sub:
+                    part = jax.lax.dot_general(
+                        qx * dx, ws, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    acc = acc.at[:, jj * bn_:(jj + 1) * bn_].add(part)
+                else:
+                    part = jax.lax.dot_general(
+                        qx, ws, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    acc = acc.at[:, jj * bn_:(jj + 1) * bn_].add(part * dx)
                 continue
-            aw = jnp.abs(ws).max()
+            aw = tile_group_amax(ws, block if w_sub else 0)
             idx_w = None
             if stochastic:
                 rw = jax.lax.broadcasted_iota(jnp.int32, (bk_, bn_), 0)
@@ -98,6 +109,12 @@ def hbfp_matmul_ref(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
             qw, dw = quantize_block(ws, mantissa_bits, aw,
                                     stochastic=stochastic, seed=seed_v,
                                     idx=idx_w)
+            if x_sub or w_sub:
+                part = jax.lax.dot_general(
+                    qx * dx, qw * dw, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                acc = acc.at[:, jj * bn_:(jj + 1) * bn_].add(part)
+                continue
             if mantissa_bits <= 8:
                 part = jax.lax.dot_general(
                     qx.astype(jnp.int8), qw.astype(jnp.int8),
@@ -112,14 +129,17 @@ def hbfp_matmul_ref(x, w, seed=None, *, mantissa_bits=8, stochastic=False,
 
 
 def hbfp_dgrad_ref(g, w, seed=None, *, mantissa_bits=8, stochastic=False,
-                   quantize_w=True, bm=128, bk=128, bn=128,
+                   quantize_w=True, block=0, bm=128, bk=128, bn=128,
                    out_dtype=jnp.float32):
     """Oracle for hbfp_dgrad_pallas: dx[M,K] = Q(g)·Q(w)^T, gradient rows
     quantized per (row, N-block), weight tiles per (bk, bn) block of w,
-    f32 accumulation across N blocks in kernel order."""
+    f32 accumulation across N blocks in kernel order. block>0 refines the
+    exponent granularity exactly like hbfp_matmul_ref."""
     M, N = g.shape
     K, _ = w.shape
     bm_, bk_, bn_ = min(bm, M), min(bk, K), min(bn, N)
+    g_sub = bool(block) and block < bn_
+    w_sub = bool(block) and (block < bk_ or block < bn_)
     seed_v = jnp.zeros((), jnp.int32) if seed is None \
         else jnp.asarray(seed).reshape(-1)[0]
     gf = g.astype(jnp.float32)
@@ -128,7 +148,7 @@ def hbfp_dgrad_ref(g, w, seed=None, *, mantissa_bits=8, stochastic=False,
     acc = jnp.zeros((M, K), jnp.float32)
     for nn in range(N // bn_):
         gs = gf[:, nn * bn_:(nn + 1) * bn_]                      # [M, bn]
-        ag = jnp.abs(gs).max(axis=1, keepdims=True)
+        ag = row_group_amax(gs, block)
         idx_g = None
         if stochastic:
             r = jax.lax.broadcasted_iota(jnp.int32, (M, bn_), 0)
@@ -139,12 +159,18 @@ def hbfp_dgrad_ref(g, w, seed=None, *, mantissa_bits=8, stochastic=False,
         for jj in range(K // bk_):
             ws = wf[jj * bk_:(jj + 1) * bk_, nn * bn_:(nn + 1) * bn_]
             if not quantize_w:
-                part = jax.lax.dot_general(
-                    qg, ws, (((1,), (1,)), ((), ())),
-                    preferred_element_type=jnp.float32)
-                acc = acc.at[:, jj * bk_:(jj + 1) * bk_].add(part * dg)
+                if g_sub:
+                    part = jax.lax.dot_general(
+                        qg * dg, ws, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    acc = acc.at[:, jj * bk_:(jj + 1) * bk_].add(part)
+                else:
+                    part = jax.lax.dot_general(
+                        qg, ws, (((1,), (1,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+                    acc = acc.at[:, jj * bk_:(jj + 1) * bk_].add(part * dg)
                 continue
-            aw = jnp.abs(ws).max()
+            aw = tile_group_amax(ws, block if w_sub else 0)
             idx_w = None
             if stochastic:
                 rw = jax.lax.broadcasted_iota(jnp.int32, (bk_, bn_), 0)
@@ -154,6 +180,12 @@ def hbfp_dgrad_ref(g, w, seed=None, *, mantissa_bits=8, stochastic=False,
             qw, dw = quantize_block(ws, mantissa_bits, aw,
                                     stochastic=stochastic, seed=seed_v,
                                     idx=idx_w)
+            if g_sub or w_sub:
+                part = jax.lax.dot_general(
+                    qg * dg, qw * dw, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                acc = acc.at[:, jj * bk_:(jj + 1) * bk_].add(part)
+                continue
             if mantissa_bits <= 8:
                 part = jax.lax.dot_general(
                     qg.astype(jnp.int8), qw.astype(jnp.int8),
@@ -168,7 +200,7 @@ def hbfp_dgrad_ref(g, w, seed=None, *, mantissa_bits=8, stochastic=False,
 
 
 def hbfp_wgrad_ref(x, g, seed=None, *, mantissa_bits=8, stochastic=False,
-                   bm=128, bk=128, bn=128, out_dtype=jnp.float32):
+                   block=0, bm=128, bk=128, bn=128, out_dtype=jnp.float32):
     """Oracle for hbfp_wgrad_pallas: dw[K,N] = Q(x)^T·Q(g). Both operands
     take per-(row, block) activation exponents (x over K-blocks on the
     forward's stream, g over N-blocks on the dgrad stream); per-token scales
@@ -188,7 +220,7 @@ def hbfp_wgrad_ref(x, g, seed=None, *, mantissa_bits=8, stochastic=False,
         gs = gf[mm * bm_:(mm + 1) * bm_]                         # [bm, N]
         for ii in range(K // bk_):
             xb = xs[:, ii * bk_:(ii + 1) * bk_]
-            ax = jnp.abs(xb).max(axis=1, keepdims=True)
+            ax = row_group_amax(xb, block)
             idx_x = None
             if stochastic:
                 r = jax.lax.broadcasted_iota(jnp.int32, (bm_, bk_), 0)
@@ -200,7 +232,7 @@ def hbfp_wgrad_ref(x, g, seed=None, *, mantissa_bits=8, stochastic=False,
                                     idx=idx_x)
             for jj in range(N // bn_):
                 gb = gs[:, jj * bn_:(jj + 1) * bn_]
-                ag = jnp.abs(gb).max(axis=1, keepdims=True)
+                ag = row_group_amax(gb, block)
                 idx_g = None
                 if stochastic:
                     rg = jax.lax.broadcasted_iota(jnp.int32, (bm_, bn_), 0)
@@ -218,12 +250,14 @@ def hbfp_wgrad_ref(x, g, seed=None, *, mantissa_bits=8, stochastic=False,
     return acc.astype(out_dtype)
 
 
-def hbfp_flash_attn_ref(q, k, v, *, m_bits=8, bq=128, bk=128, causal=True,
-                        with_lse=False):
+def hbfp_flash_attn_ref(q, k, v, *, m_bits=8, m_qk=0, m_pv=0, bq=128,
+                        bk=128, causal=True, with_lse=False):
     """Oracle for hbfp_flash_attention: same per-block BFP quantization,
     same online-softmax order of operations (bit-exact in f32).
-    with_lse=True additionally returns the per-row logsumexp [BH, S]."""
+    with_lse=True additionally returns the per-row logsumexp [BH, S].
+    m_qk/m_pv (0 ⇒ m_bits) are the per-role contraction widths."""
     BH, S, hd = q.shape
+    m_qk, m_pv = m_qk or m_bits, m_pv or m_bits
     bq_, bk_ = min(bq, S), min(bk, S)
     scale = 1.0 / (hd ** 0.5)
     out = jnp.zeros_like(q, jnp.float32)
@@ -231,7 +265,7 @@ def hbfp_flash_attn_ref(q, k, v, *, m_bits=8, bq=128, bk=128, causal=True,
     for b in range(BH):
         for i in range(S // bq_):
             qs = q[b, i * bq_:(i + 1) * bq_].astype(jnp.float32) * scale
-            qq, dq = quantize_block(qs, m_bits,
+            qq, dq = quantize_block(qs, m_qk,
                                     jnp.abs(qs).max(1, keepdims=True),
                                     stochastic=False)
             m = jnp.full((bq_, 1), -1e30, jnp.float32)
@@ -242,10 +276,10 @@ def hbfp_flash_attn_ref(q, k, v, *, m_bits=8, bq=128, bk=128, causal=True,
                     continue
                 ks = k[b, j * bk_:(j + 1) * bk_].astype(jnp.float32)
                 vs = v[b, j * bk_:(j + 1) * bk_].astype(jnp.float32)
-                kq, dk = quantize_block(ks, m_bits,
+                kq, dk = quantize_block(ks, m_qk,
                                         jnp.abs(ks).max(1, keepdims=True),
                                         stochastic=False)
-                if m_bits <= 8:
+                if m_qk <= 8:
                     s = jax.lax.dot_general(
                         qq.astype(jnp.int8), kq.T.astype(jnp.int8),
                         (((1,), (0,)), ((), ())),
@@ -261,13 +295,13 @@ def hbfp_flash_attn_ref(q, k, v, *, m_bits=8, bq=128, bk=128, causal=True,
                 alpha = jnp.exp(m - m_new)
                 p = jnp.exp(s - m_new)
                 l = l * alpha + p.sum(1, keepdims=True)
-                pq, dp = quantize_block(p, m_bits,
+                pq, dp = quantize_block(p, m_pv,
                                         jnp.abs(p).max(1, keepdims=True),
                                         stochastic=False)
-                vq, dv = quantize_block(vs, m_bits,
+                vq, dv = quantize_block(vs, m_pv,
                                         jnp.abs(vs).max(0, keepdims=True),
                                         stochastic=False)
-                if m_bits <= 8:
+                if m_pv <= 8:
                     pv = jax.lax.dot_general(
                         pq.astype(jnp.int8), vq.astype(jnp.int8),
                         (((1,), (0,)), ((), ())),
@@ -286,29 +320,33 @@ def hbfp_flash_attn_ref(q, k, v, *, m_bits=8, bq=128, bk=128, causal=True,
     return out.astype(q.dtype)
 
 
-def hbfp_flash_attn_vjp_ref(q, k, v, do, *, m_bits=8, bq=128, bk=128,
-                            causal=True):
+def hbfp_flash_attn_vjp_ref(q, k, v, do, *, m_bits=8, m_qk=0, m_pv=0,
+                            bq=128, bk=128, causal=True):
     """Oracle for hbfp_flash_attention_bwd: same BFP quantization of every
     backward GEMM operand, same block order (dq accumulates over k-blocks
-    per q-block; dk/dv over q-blocks per k-block). Returns (dq, dk, dv)."""
+    per q-block; dk/dv over q-blocks per k-block). Returns (dq, dk, dv).
+    m_qk/m_pv (0 ⇒ m_bits): QK-side operands (q, k, ds) at the QK width,
+    PV-side operands (p, v, do) at the PV width."""
     BH, S, hd = q.shape
+    m_qk, m_pv = m_qk or m_bits, m_pv or m_bits
     bq_, bk_ = min(bq, S), min(bk, S)
     scale = 1.0 / (hd ** 0.5)
-    out, lse = hbfp_flash_attn_ref(q, k, v, m_bits=m_bits, bq=bq_, bk=bk_,
+    out, lse = hbfp_flash_attn_ref(q, k, v, m_bits=m_bits, m_qk=m_qk,
+                                   m_pv=m_pv, bq=bq_, bk=bk_,
                                    causal=causal, with_lse=True)
     dof = do.astype(jnp.float32)
     delta = (dof * out.astype(jnp.float32)).sum(-1)      # [BH, S]
 
-    def rows(x):
-        return quantize_block(x, m_bits, jnp.abs(x).max(1, keepdims=True),
+    def rows(x, m):
+        return quantize_block(x, m, jnp.abs(x).max(1, keepdims=True),
                               stochastic=False)
 
     def recompute(b, i, j):
         qs = q[b, i * bq_:(i + 1) * bq_].astype(jnp.float32) * scale
         ks = k[b, j * bk_:(j + 1) * bk_].astype(jnp.float32)
-        qq, dqv = rows(qs)
-        kq, dkv = rows(ks)
-        if m_bits <= 8:
+        qq, dqv = rows(qs, m_qk)
+        kq, dkv = rows(ks, m_qk)
+        if m_qk <= 8:
             s = jax.lax.dot_general(
                 qq.astype(jnp.int8), kq.T.astype(jnp.int8),
                 (((1,), (0,)), ((), ())),
@@ -325,8 +363,8 @@ def hbfp_flash_attn_vjp_ref(q, k, v, do, *, m_bits=8, bq=128, bk=128,
 
     def dsoft(b, i, j, p, do_q, do_d):
         vs = v[b, j * bk_:(j + 1) * bk_].astype(jnp.float32)
-        vq, dv_ = rows(vs)
-        if m_bits <= 8:
+        vq, dv_ = rows(vs, m_pv)
+        if m_pv <= 8:
             dp = jax.lax.dot_general(
                 do_q.astype(jnp.int8), vq.T.astype(jnp.int8),
                 (((1,), (0,)), ((), ())),
@@ -342,13 +380,13 @@ def hbfp_flash_attn_vjp_ref(q, k, v, do, *, m_bits=8, bq=128, bk=128,
     for b in range(BH):
         for i in range(S // bq_):
             acc = jnp.zeros((bq_, hd), jnp.float32)
-            do_q, do_d = rows(dof[b, i * bq_:(i + 1) * bq_])
+            do_q, do_d = rows(dof[b, i * bq_:(i + 1) * bq_], m_pv)
             for j in range(S // bk_):
                 if causal and j * bk_ > i * bq_ + bq_ - 1:
                     continue
                 p, _, (kq, dkv) = recompute(b, i, j)
                 ds = dsoft(b, i, j, p, do_q, do_d)
-                ds_q, ds_d = rows(ds)
+                ds_q, ds_d = rows(ds, m_qk)
                 acc = acc + ((ds_q * ds_d) @ (kq * dkv)) * scale
             dq = dq.at[b, i * bq_:(i + 1) * bq_].set(acc)
         for j in range(S // bk_):
@@ -358,13 +396,13 @@ def hbfp_flash_attn_vjp_ref(q, k, v, do, *, m_bits=8, bq=128, bk=128,
                 if causal and j * bk_ > i * bq_ + bq_ - 1:
                     continue
                 p, (qq, dqv), _ = recompute(b, i, j)
-                do_q, do_d = rows(dof[b, i * bq_:(i + 1) * bq_])
-                p_q, p_d = rows(p)
+                do_q, do_d = rows(dof[b, i * bq_:(i + 1) * bq_], m_pv)
+                p_q, p_d = rows(p, m_pv)
                 acc_v = acc_v + jax.lax.dot_general(
                     p_q * p_d, do_q * do_d, (((0,), (0,)), ((), ())),
                     preferred_element_type=jnp.float32)
                 ds = dsoft(b, i, j, p, do_q, do_d)
-                ds_q, ds_d = rows(ds)
+                ds_q, ds_d = rows(ds, m_qk)
                 acc_k = acc_k + jax.lax.dot_general(
                     ds_q * ds_d, qq * dqv, (((0,), (0,)), ((), ())),
                     preferred_element_type=jnp.float32)

@@ -102,17 +102,27 @@ def flash_mha(q, k, v, ctx):
     kernels). q: [B,H,S,hd], k/v: [B,Hkv,S,hd] (GQA groups broadcast; the
     repeat's transpose sums group gradients). Assumes the standard
     contiguous causal layout — position-index masking, no window/softcap
-    (attention_layer gates on those statically)."""
+    (attention_layer gates on those statically). Per-role attention widths
+    (attn_qk/attn_pv policies) resolve into FlashSpec.m_qk/m_pv, so they
+    run on this fast path too (DESIGN.md §11)."""
     from repro.kernels import ops as kops
     from repro.kernels.hbfp_flash_attn import FlashSpec, flash_attention_vjp
+    from repro.precision import role_width_for
     B, H, S, hd = q.shape
     Hkv = k.shape[1]
     if Hkv != H:
         k = jnp.repeat(k, H // Hkv, axis=1)
         v = jnp.repeat(v, H // Hkv, axis=1)
     blk = _flash_block(S)
-    spec = FlashSpec(m_bits=ctx.cfg.mantissa_bits, bq=blk, bk=blk,
-                     causal=True, interpret=kops.INTERPRET)
+    m = ctx.cfg.mantissa_bits
+    widths = {}
+    for role in ("attn_qk", "attn_pv"):
+        rw = role_width_for(ctx.roles, role)
+        w = rw.apply(ctx.cfg).mantissa_bits if rw is not None else m
+        widths[role] = 0 if w == m else w
+    spec = FlashSpec(m_bits=m, bq=blk, bk=blk,
+                     causal=True, interpret=kops.INTERPRET,
+                     m_qk=widths["attn_qk"], m_pv=widths["attn_pv"])
     out = flash_attention_vjp(spec, q.reshape(B * H, S, hd),
                               k.reshape(B * H, S, hd),
                               v.reshape(B * H, S, hd))
@@ -191,16 +201,14 @@ def attention_layer(x, p, ctx, *, n_heads, n_kv_heads, head_dim,
     if cache is None:
         # fused flash path (DESIGN.md §10): gate on static facts only — the
         # arch's attention pattern (flash_ok), the backend, nearest rounding
-        # (the flash kernels are deterministic), block divisibility, and no
-        # per-role attention widths (FlashSpec runs both contractions at
-        # one width; attn_qk/attn_pv policies stay on the sim path, which
-        # honors them — DESIGN.md §11)
+        # (the flash kernels are deterministic), and block divisibility.
+        # Per-role attention widths (attn_qk/attn_pv) no longer force the
+        # sim fallback: FlashSpec carries both contraction widths, so those
+        # policies run on the fast path (DESIGN.md §11)
         use_flash = (flash_ok and ctx.backend == "pallas"
                      and ctx.cfg is not None and ctx.cfg.quantize_attention
                      and ctx.cfg.rounding == "nearest"
-                     and _flash_block(S) is not None
-                     and not any(rw.role in ("attn_qk", "attn_pv")
-                                 for rw in ctx.roles or ()))
+                     and _flash_block(S) is not None)
         qpos = tok_pos if tok_pos.ndim == 2 else tok_pos
         if use_flash:
             out = flash_mha(q, k, v, ctx)

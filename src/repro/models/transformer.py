@@ -21,6 +21,7 @@ from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import attention as attn_mod
@@ -292,10 +293,29 @@ def _logits(params, x, arch: ArchConfig, ctx):
 # public API
 # ----------------------------------------------------------------------------
 
+def _std_positions(batch) -> bool:
+    """True when attention may mask by block index (the flash path):
+    positions are either synthesized (absent from the batch) or a CONCRETE
+    host-side array equal to the standard contiguous arange — explicit
+    positions with standard values are just the default layout spelled
+    out. Traced positions can't be inspected at trace time, and packed /
+    offset layouts have non-arange values; both stay on the sim path,
+    which masks by the actual position values."""
+    if "positions" not in batch:
+        return True
+    pos = batch["positions"]
+    if isinstance(pos, jax.core.Tracer):
+        return False
+    p = np.asarray(pos)
+    if p.ndim not in (2, 3):  # [B, S] or mrope [3, B, S]
+        return False
+    return bool((p == np.arange(p.shape[-1], dtype=p.dtype)).all())
+
+
 def forward(params, batch, arch: ArchConfig, ctx: Ctx):
     x, positions = _embed_in(params, batch, arch, ctx)
     x, _, aux = _run_stack(params, x, positions, arch, ctx,
-                           std_pos="positions" not in batch)
+                           std_pos=_std_positions(batch))
     return _logits(params, x, arch, ctx), aux
 
 
@@ -323,7 +343,7 @@ def loss_fn(params, batch, arch: ArchConfig, ctx: Ctx,
 
         act_stats = {"embed_out": tap(x)}
     x, _, aux = _run_stack(params, x, positions, arch, ctx,
-                           std_pos="positions" not in batch)
+                           std_pos=_std_positions(batch))
     if act_stats is not None:
         act_stats["final_hidden"] = tap(x)
     x = rms_norm(x, params["final_norm_scale"], arch.norm_eps,
@@ -397,7 +417,7 @@ def prefill(params, batch, arch: ArchConfig, ctx: Ctx):
     x, positions = _embed_in(params, batch, arch, ctx)
     x, cache, _ = _run_stack(params, x, positions, arch, ctx,
                              want_cache=True,
-                             std_pos="positions" not in batch)
+                             std_pos=_std_positions(batch))
     logits = _logits(params, x[:, -1:], arch, ctx)
     return logits, cache
 

@@ -14,6 +14,15 @@ decisions along a fixed ladder of widths (the paper's §6 design space:
     headroom above the floor (each mantissa bit ≈ 6.02 dB) with clipping
     and flush-to-zero well inside the deadband.
 
+With a non-empty `block_ladder` the controller additionally trades the
+*block-size* axis on the same signals (FlexBlock/FAST, DESIGN.md §13):
+FTZ-only triggers prefer shrinking the exponent block one rung (finer
+scaling attacks the in-tile outlier directly), a widen with the mantissa
+ladder exhausted falls back to a block shrink, and headroom with the
+mantissa at its floor grows the block instead. Block decisions carry
+`"axis": "block"` in the log and ratchet via a per-layer block cap,
+mirroring the mantissa floor.
+
 Stability (the hysteresis contract, tested in tests/test_numerics.py):
 
   * a **deadband** separates the widen and narrow conditions (floor vs
@@ -47,6 +56,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro.core import schedule_precision as sp
 from repro.core.formats import HBFPConfig
 from repro.core.schedule_precision import ResolvedPrecision
 
@@ -58,6 +68,16 @@ class ControllerConfig:
     """Thresholds and dynamics of the adaptive-precision loop.
 
     ladder: allowed mantissa widths, ascending (paper §6 design space).
+    block_ladder: allowed exponent-block sizes, ascending (FlexBlock's
+      multi-mode axis, DESIGN.md §13). Empty (the default) disables block
+      control — the controller then behaves exactly as before. Non-empty,
+      the controller trades the two axes on the same signals: an FTZ
+      trigger (an in-tile outlier crushing small values) prefers
+      *shrinking the block* one rung over widening the mantissa — finer
+      exponent granularity attacks the outlier directly — and a widen
+      trigger with the mantissa already at the top of its ladder falls
+      back to a block shrink; symmetric headroom with the mantissa at its
+      floor *grows the block* (coarser ⇒ denser/faster).
     sqnr_floor_db: widen when worst-source SQNR drops below this.
     clip_threshold: widen when the tile-saturation rate exceeds this.
     ftz_threshold: widen when the flush-to-zero rate (fraction of nonzero
@@ -78,12 +98,17 @@ class ControllerConfig:
     headroom_bits: float = 5.0
     patience: int = 2
     cooldown: int = 2
+    block_ladder: Tuple[int, ...] = ()
 
     def __post_init__(self):
         if tuple(sorted(self.ladder)) != tuple(self.ladder) or \
                 len(set(self.ladder)) != len(self.ladder):
             raise ValueError(f"ladder must be strictly ascending: "
                              f"{self.ladder}")
+        bl = tuple(self.block_ladder)
+        if bl and (tuple(sorted(bl)) != bl or len(set(bl)) != len(bl)):
+            raise ValueError(f"block_ladder must be strictly ascending: "
+                             f"{bl}")
         if self.patience < 1 or self.cooldown < 0:
             raise ValueError("patience >= 1 and cooldown >= 0 required")
 
@@ -116,8 +141,8 @@ class PrecisionController:
     """
 
     def __init__(self, config: Optional[ControllerConfig] = None,
-                 base_bits: int = 8, *, recorder=None,
-                 meta_log_cap: int = 256):
+                 base_bits: int = 8, *, base_block: Optional[int] = None,
+                 recorder=None, meta_log_cap: int = 256):
         self.config = config or ControllerConfig()
         if base_bits not in self.config.ladder:
             raise ValueError(f"base_bits {base_bits} not on ladder "
@@ -126,8 +151,23 @@ class PrecisionController:
             raise ValueError(f"meta_log_cap must be >= 1, got "
                              f"{meta_log_cap}")
         self.base_bits = int(base_bits)
+        # block control is active iff block_ladder is non-empty; the base
+        # block defaults to the ladder's coarsest rung (DESIGN.md §13)
+        if self.config.block_ladder:
+            bb = base_block if base_block is not None \
+                else self.config.block_ladder[-1]
+            if bb not in self.config.block_ladder:
+                raise ValueError(f"base_block {bb} not on block ladder "
+                                 f"{self.config.block_ladder}")
+            self.base_block: Optional[int] = int(bb)
+        else:
+            if base_block is not None:
+                raise ValueError("base_block requires a block_ladder")
+            self.base_block = None
         self.widths: Dict[str, int] = {}     # only layers that diverged
+        self.blocks: Dict[str, int] = {}     # only layers that diverged
         self._floor: Dict[str, int] = {}     # ratchet: min allowed width
+        self._block_cap: Dict[str, int] = {}  # ratchet: max allowed block
         self._votes: Dict[str, int] = {}     # +widen / -narrow streak
         self._cooldown: Dict[str, int] = {}
         self.log: List[dict] = []
@@ -147,25 +187,39 @@ class PrecisionController:
     def width(self, layer: str) -> int:
         return self.widths.get(layer, self.base_bits)
 
-    def overrides(self) -> Tuple[Tuple[str, int], ...]:
-        """Per-layer overrides, schedule-compatible, deterministic order."""
-        return tuple(sorted(self.widths.items()))
+    def block(self, layer: str) -> Optional[int]:
+        """Current block size of `layer` (None ⇒ block control disabled)."""
+        return self.blocks.get(layer, self.base_block)
+
+    def overrides(self) -> Tuple[Tuple[str, object], ...]:
+        """Per-layer overrides, schedule-compatible, deterministic order.
+        A layer whose only divergence is its mantissa emits the bare width
+        (the pre-block wire format, so old consumers keep working); a layer
+        whose block diverged emits an {"m", "b"} axis dict consumed by
+        `schedule_precision._apply_override` (DESIGN.md §13)."""
+        out = []
+        for name in sorted(set(self.widths) | set(self.blocks)):
+            if name in self.blocks:
+                out.append((name, {"m": self.widths.get(name),
+                                   "b": self.blocks[name]}))
+            else:
+                out.append((name, self.widths[name]))
+        return tuple(out)
 
     def resolved(self, base_cfg: HBFPConfig) -> ResolvedPrecision:
         """ResolvedPrecision for the *current* controller state (one
-        adaptive 'segment'): base_cfg everywhere, per-layer width overrides
-        merged onto the base grid exactly like schedule overrides."""
-        ovr = tuple(
-            (name, base_cfg.with_(
-                mantissa_bits=w,
-                wide_mantissa_bits=max(base_cfg.wide_mantissa_bits, w)))
-            for name, w in self.overrides())
+        adaptive 'segment'): base_cfg everywhere, per-layer width/block
+        overrides merged onto the base grid exactly like schedule
+        overrides."""
+        ovr = tuple((name, sp._apply_override(base_cfg, v))
+                    for name, v in self.overrides())
         return ResolvedPrecision(global_cfg=base_cfg, overrides=ovr,
                                  exact=True)
 
     # -- the control law ---------------------------------------------------
-    def _rung(self, bits: int, direction: int) -> Optional[int]:
-        ladder = self.config.ladder
+    def _rung(self, bits: int, direction: int,
+              ladder: Optional[Tuple[int, ...]] = None) -> Optional[int]:
+        ladder = self.config.ladder if ladder is None else ladder
         i = ladder.index(bits) + direction
         if 0 <= i < len(ladder):
             return ladder[i]
@@ -180,23 +234,36 @@ class PrecisionController:
         for layer in sorted(merged):
             s = merged[layer]
             w = self.width(layer)
+            b = self.block(layer)
             if self._cooldown.get(layer, 0) > 0:
                 self._cooldown[layer] -= 1
                 continue
             clip = s.get("sat_tile_frac", s.get("clip_frac", 0.0))
             ftz = s.get("ftz_frac", 0.0)
+            # block-axis moves available from this layer's current state:
+            # shrink is unratcheted; grow respects the per-layer cap
+            shrink = self._rung(b, -1, cfg.block_ladder) \
+                if cfg.block_ladder else None
+            grow = self._rung(b, +1, cfg.block_ladder) \
+                if cfg.block_ladder else None
+            if grow is not None and grow > self._block_cap.get(
+                    layer, cfg.block_ladder[-1]):
+                grow = None
             widen_wanted = (s["sqnr_db"] < cfg.sqnr_floor_db
                             or clip > cfg.clip_threshold
                             or ftz > cfg.ftz_threshold) \
-                and self._rung(w, +1) is not None
+                and (self._rung(w, +1) is not None or shrink is not None)
             narrow_wanted = (not widen_wanted
                              and s["sqnr_db"] >= cfg.sqnr_floor_db
                              + DB_PER_BIT * cfg.headroom_bits
                              and clip < cfg.clip_threshold / 4.0
                              and ftz < cfg.ftz_threshold / 4.0)
             target = self._rung(w, -1) if narrow_wanted else None
-            narrow_wanted = target is not None \
-                and target >= self._floor.get(layer, cfg.ladder[0])
+            if target is not None \
+                    and target < self._floor.get(layer, cfg.ladder[0]):
+                target = None
+            narrow_wanted = narrow_wanted \
+                and (target is not None or grow is not None)
 
             v = self._votes.get(layer, 0)
             if widen_wanted:
@@ -213,22 +280,45 @@ class PrecisionController:
                           else "sqnr<floor"
                           if s["sqnr_db"] < cfg.sqnr_floor_db
                           else "ftz>thr")
-                self._apply(decisions, step, layer, "widen", w, to, reason, s)
-                self._floor[layer] = to  # ratchet: never narrow back past
+                # Trade-off law (DESIGN.md §13): an FTZ-only trigger is an
+                # in-tile outlier — a block-granularity problem — so a
+                # finer block is preferred over a wider mantissa; a widen
+                # wanted with the mantissa ladder exhausted also falls
+                # back to the block axis.
+                if shrink is not None and (reason == "ftz>thr"
+                                           or to is None):
+                    self._apply(decisions, step, layer, "shrink_block",
+                                b, shrink, reason, s, axis="block")
+                    self._block_cap[layer] = shrink  # never grow back past
+                else:
+                    self._apply(decisions, step, layer, "widen", w, to,
+                                reason, s)
+                    self._floor[layer] = to  # never narrow back past
             elif v <= -cfg.patience:
-                self._apply(decisions, step, layer, "narrow", w, target,
-                            "headroom", s)
+                if target is not None:
+                    self._apply(decisions, step, layer, "narrow", w,
+                                target, "headroom", s)
+                else:
+                    self._apply(decisions, step, layer, "grow_block", b,
+                                grow, "headroom", s, axis="block")
         return decisions
 
-    def _apply(self, decisions, step, layer, action, frm, to, reason, s):
-        if to == self.base_bits:
+    def _apply(self, decisions, step, layer, action, frm, to, reason, s,
+               axis: str = "m"):
+        if axis == "block":
+            if to == self.base_block:
+                self.blocks.pop(layer, None)
+            else:
+                self.blocks[layer] = int(to)
+        elif to == self.base_bits:
             self.widths.pop(layer, None)
         else:
             self.widths[layer] = int(to)
         self._votes[layer] = 0
         self._cooldown[layer] = self.config.cooldown
         d = {"step": int(step), "layer": layer, "action": action,
-             "from": int(frm), "to": int(to), "reason": reason,
+             "axis": axis, "from": int(frm), "to": int(to),
+             "reason": reason,
              "sqnr_db": round(float(s["sqnr_db"]), 3),
              "clip_frac": float(s.get("sat_tile_frac",
                                       s.get("clip_frac", 0.0)))}
@@ -250,9 +340,12 @@ class PrecisionController:
         cap = self.meta_log_cap
         dropped = self.log_dropped + max(0, len(self.log) - cap)
         return {"base_bits": self.base_bits,
+                "base_block": self.base_block,
                 "config": dataclasses.asdict(self.config),
                 "widths": dict(self.widths),
+                "blocks": dict(self.blocks),
                 "floor": dict(self._floor),
+                "block_cap": dict(self._block_cap),
                 "votes": dict(self._votes),
                 "cooldown": dict(self._cooldown),
                 "log": list(self.log[-cap:]),
@@ -265,9 +358,16 @@ class PrecisionController:
         self.base_bits = int(meta["base_bits"])
         c = dict(meta["config"])
         c["ladder"] = tuple(c["ladder"])
+        c["block_ladder"] = tuple(c.get("block_ladder", ()))
         self.config = ControllerConfig(**c)
+        # pre-block metas (.get defaults) restore with block control off
+        bb = meta.get("base_block")
+        self.base_block = None if bb is None else int(bb)
         self.widths = {k: int(v) for k, v in meta["widths"].items()}
+        self.blocks = {k: int(v) for k, v in meta.get("blocks", {}).items()}
         self._floor = {k: int(v) for k, v in meta["floor"].items()}
+        self._block_cap = {k: int(v)
+                           for k, v in meta.get("block_cap", {}).items()}
         self._votes = {k: int(v) for k, v in meta["votes"].items()}
         self._cooldown = {k: int(v) for k, v in meta["cooldown"].items()}
         self.log = list(meta["log"])

@@ -256,6 +256,12 @@ class PrecisionPolicy:
                 controller loop rather than baked in here.
     role_widths: per-GEMM-role width adjustments (RoleWidth, ...).
     backend:    "sim" | "pallas" for every dot product under the policy.
+    block_schedule: step-driven block-size axis ((start_step, b), ...) —
+                the exponent-sharing block size `b` applied on top of the
+                deciding format via `HBFPConfig.with_block` (DSL clause
+                "b=16@0,b=64@50%"; DESIGN.md §13). Segments are the union
+                of mantissa- and block-schedule boundaries; empty ⇒ the
+                format's own tile/act_block stand.
 
     Construct directly, via `parse_policy` (the spec-string DSL), or via
     `as_policy` (coercion from every legacy spec kind).
@@ -267,6 +273,7 @@ class PrecisionPolicy:
     controller_overrides: Tuple[Tuple[str, OverrideValue], ...] = ()
     role_widths: Tuple[RoleWidth, ...] = ()
     backend: str = "sim"
+    block_schedule: Tuple[Tuple[int, int], ...] = ()
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -275,23 +282,60 @@ class PrecisionPolicy:
         roles = [rw.role for rw in self.role_widths]
         if len(set(roles)) != len(roles):
             raise ValueError(f"duplicate role widths: {roles}")
+        if self.block_schedule:
+            starts = [s for s, _ in self.block_schedule]
+            if starts[0] != 0:
+                raise ValueError(
+                    f"first block segment must start at 0, got {starts[0]}")
+            if any(b <= a for a, b in zip(starts, starts[1:])):
+                raise ValueError(
+                    f"block-segment starts must strictly increase: {starts}")
+            if any(int(b) < 1 for _, b in self.block_schedule):
+                raise ValueError(
+                    f"block sizes must be positive: {self.block_schedule}")
 
     # -- segment table -------------------------------------------------------
+    # Segments are the union of the mantissa schedule's boundaries and the
+    # block schedule's boundaries: the compiled step changes whenever EITHER
+    # axis changes (DESIGN.md §13).
     @property
     def num_segments(self) -> int:
-        return self.schedule.num_segments if self.schedule is not None else 1
+        return len(self.boundaries())
 
     def boundaries(self) -> Tuple[int, ...]:
-        return self.schedule.boundaries() if self.schedule is not None \
-            else (0,)
+        starts = {0}
+        if self.schedule is not None:
+            starts.update(self.schedule.boundaries())
+        starts.update(s for s, _ in self.block_schedule)
+        return tuple(sorted(starts))
 
     def segment_index(self, step: int) -> int:
-        return self.schedule.segment_index(step) \
-            if self.schedule is not None else 0
+        i = 0
+        for j, start in enumerate(self.boundaries()):
+            if step >= start:
+                i = j
+        return i
+
+    def block_at(self, step: int) -> Optional[int]:
+        """The scheduled block size governing `step` (None ⇒ the deciding
+        format's own tile/act_block stand — no block scheduling)."""
+        b = None
+        for start, bb in self.block_schedule:
+            if step >= start:
+                b = int(bb)
+        return b
 
     def segment_cfg(self, i: int) -> Optional[HBFPConfig]:
-        return self.schedule.segments[i][1] if self.schedule is not None \
-            else self.base
+        step = self.boundaries()[i]
+        if self.schedule is not None:
+            cfg = self.schedule.segments[
+                self.schedule.segment_index(step)][1]
+        else:
+            cfg = self.base
+        b = self.block_at(step)
+        if cfg is not None and b is not None:
+            cfg = cfg.with_block(b)
+        return cfg
 
     def resolve_segment(self, i: int) -> ResolvedPolicy:
         """Everything one compiled train step needs, frozen and hashable.
@@ -315,8 +359,7 @@ class PrecisionPolicy:
     def resolve(self, site, step: int = 0) -> ResolvedQuant:
         """Concrete quantization decision for one site at one step."""
         rq = self.resolve_segment(self.segment_index(step)).resolve(site)
-        if rq.source == "base" and self.schedule is not None \
-                and self.schedule.num_segments > 1:
+        if rq.source == "base" and self.num_segments > 1:
             rq = dataclasses.replace(rq, source="schedule")
         return rq
 
@@ -342,6 +385,9 @@ class PrecisionPolicy:
             parts.append(self.schedule.name)
         else:
             parts.append("fp32" if self.base is None else self.base.name)
+        if self.block_schedule:
+            parts.append(",".join(f"b={b}@{s}"
+                                  for s, b in self.block_schedule))
         parts += [rw.spec for rw in self.role_widths]
         parts += [f"{f}:{0 if v is None else v}" if not isinstance(
             v, HBFPConfig) else f"{f}:{v.name}"
@@ -364,13 +410,19 @@ class PrecisionPolicy:
             "role_widths": [[rw.role, rw.delta, rw.bits]
                             for rw in self.role_widths],
             "backend": self.backend,
+            "block_schedule": [[int(s), int(b)]
+                               for s, b in self.block_schedule],
         }
 
     @classmethod
     def from_dict(cls, d: dict) -> "PrecisionPolicy":
         def ovr(pairs):
-            return tuple((f, sp.config_from_dict(v) if isinstance(v, dict)
-                          else v) for f, v in pairs)
+            # Dicts are serialized HBFPConfigs (kind == "hbfp") or {"m","b"}
+            # axis overrides, which pass through verbatim (DESIGN.md §13).
+            return tuple(
+                (f, sp.config_from_dict(v)
+                 if isinstance(v, dict) and v.get("kind") == "hbfp" else v)
+                for f, v in pairs)
         return cls(
             base=sp.config_from_dict(d.get("base")),
             schedule=None if d.get("schedule") is None
@@ -379,7 +431,9 @@ class PrecisionPolicy:
             controller_overrides=ovr(d.get("controller_overrides", [])),
             role_widths=tuple(RoleWidth(r, delta=dl, bits=b)
                               for r, dl, b in d.get("role_widths", [])),
-            backend=d.get("backend", "sim"))
+            backend=d.get("backend", "sim"),
+            block_schedule=tuple((int(s), int(b))
+                                 for s, b in d.get("block_schedule", [])))
 
 
 # ---------------------------------------------------------------------------
@@ -434,6 +488,34 @@ def as_segment(spec, backend: Optional[str] = None) -> ResolvedPolicy:
 # ---------------------------------------------------------------------------
 
 _ROLE_RE = re.compile(r"^(dgrad|wgrad|attn_qk|attn_pv)\s*([+\-=])\s*(\d+)$")
+_BLOCK_RE = re.compile(r"^b\s*=\s*(\d+)\s*(?:@\s*([0-9.]+%|\d+)\s*)?$")
+
+
+def _parse_block_clause(clause: str, total_steps: Optional[int],
+                        spec: str) -> Tuple[Tuple[int, int], ...]:
+    """Parse one block-schedule clause: "b=16" or "b=16@0,b=64@50%"."""
+    pairs = []
+    for i, term in enumerate(t.strip() for t in clause.split(",")):
+        m = _BLOCK_RE.match(term)
+        if not m:
+            raise ValueError(f"unparseable block term {term!r} in policy "
+                             f"spec {spec!r} (grammar: b=SIZE[@START])")
+        b, s = int(m.group(1)), m.group(2)
+        if s is None:
+            if i > 0:
+                raise ValueError(
+                    f"block term {term!r} of spec {spec!r} needs an explicit "
+                    f"@START (only the first block term defaults to 0)")
+            start = 0
+        elif s.endswith("%"):
+            if total_steps is None:
+                raise ValueError(
+                    f"spec {spec!r} uses %-steps; pass total_steps")
+            start = int(round(total_steps * float(s[:-1]) / 100.0))
+        else:
+            start = int(s)
+        pairs.append((start, b))
+    return tuple(pairs)
 
 
 def parse_policy(spec: str, total_steps: Optional[int] = None,
@@ -449,8 +531,10 @@ def parse_policy(spec: str, total_steps: Optional[int] = None,
         SEG     := WIDTH [@START] [~ROUNDING]
         CLAUSE  := ROLE ("+"|"-") DELTA             # e.g. "wgrad+2"
                  | ROLE "=" BITS                    # e.g. "dgrad=8"
+                 | BLK ("," BLK)*                   # block-size schedule
                  | NAME ":" (WIDTH | "fp32" | "0")  # per-layer override
                  | "backend=" ("sim" | "pallas")
+        BLK     := "b=" SIZE [@START]               # e.g. "b=16@0,b=64@50%"
 
     Examples:
         "8"                                      constant hbfp8_16
@@ -458,6 +542,9 @@ def parse_policy(spec: str, total_steps: Optional[int] = None,
         "4@0,8@90%; wgrad+2; lm_head:8; backend=pallas"
             4-bit fwd (8-bit from 90%), wgrad two bits wider, the LM head
             pinned at 8 bits, all GEMMs on the Pallas kernels.
+        "4@0,8@90%; b=16@0,b=64@50%; wgrad+2"
+            small exponent blocks early (finer scaling while 4-bit), coarser
+            64-wide blocks from midway (FAST-style two-axis schedule).
     """
     clauses = [c.strip() for c in spec.split(";") if c.strip()]
     if not clauses:
@@ -465,6 +552,7 @@ def parse_policy(spec: str, total_steps: Optional[int] = None,
     fmt, rest = clauses[0], clauses[1:]
 
     roles, overrides = [], []
+    blocks: Tuple[Tuple[int, int], ...] = ()
     be = backend
     for c in rest:
         m = _ROLE_RE.match(c)
@@ -479,6 +567,12 @@ def parse_policy(spec: str, total_steps: Optional[int] = None,
                 raise ValueError(f"unknown backend {be!r} in policy "
                                  f"spec {spec!r}")
             continue
+        if re.match(r"^b\s*=", c):
+            if blocks:
+                raise ValueError(f"duplicate block clause {c!r} in policy "
+                                 f"spec {spec!r}")
+            blocks = _parse_block_clause(c, total_steps, spec)
+            continue
         if ":" in c:
             name, w = (p.strip() for p in c.split(":", 1))
             if w in ("fp32", "fp", "0"):
@@ -488,7 +582,8 @@ def parse_policy(spec: str, total_steps: Optional[int] = None,
             continue
         raise ValueError(f"unparseable policy clause {c!r} in {spec!r} "
                          f"(roles: dgrad/wgrad/attn_qk/attn_pv; layer "
-                         f"overrides: 'name:width'; 'backend=sim|pallas')")
+                         f"overrides: 'name:width'; block schedule "
+                         f"'b=SIZE[@START]'; 'backend=sim|pallas')")
 
     if fmt == "fp32":
         fmt_base, fmt_sched = None, None
@@ -502,4 +597,5 @@ def parse_policy(spec: str, total_steps: Optional[int] = None,
     return PrecisionPolicy(base=fmt_base, schedule=fmt_sched,
                            layer_overrides=tuple(overrides),
                            role_widths=tuple(roles),
-                           backend=be or "sim")
+                           backend=be or "sim",
+                           block_schedule=blocks)

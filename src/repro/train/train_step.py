@@ -357,7 +357,13 @@ def make_step(arch: ArchConfig, policy, schedule, *,
             0 if gcfg is None else gcfg.mantissa_bits, jnp.float32)
         if controller is not None:
             ovr = controller.overrides()
-            widths = [w for _, w in ovr] + [controller.base_bits]
+            # override values are bare widths or {"m", "b"} axis dicts
+            # (block-axis decisions, DESIGN.md §13); a dict's "m" is None
+            # when only the block diverged from the base format
+            widths = [w.get("m") if isinstance(w, dict) else w
+                      for _, w in ovr]
+            widths = [w for w in widths if w is not None]
+            widths.append(controller.base_bits)
             metrics["n_overrides"] = jnp.asarray(float(len(ovr)),
                                                  jnp.float32)
             metrics["min_mantissa_bits"] = jnp.asarray(float(min(widths)),

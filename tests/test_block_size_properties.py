@@ -1,0 +1,344 @@
+"""Property suite pinning the schedulable block-size axis (DESIGN.md §13).
+
+The block size `b` (HBFPConfig.with_block) is a first-class policy axis:
+these tests pin the quantizer-level invariants (pad-and-slice exactness,
+idempotence, SQNR monotone in b), the sim↔pallas bit-identity per
+(m, b, rounding) cell, the requantize-from-master law across block
+changes, block-keyed autotune cells, block-salted rounding streams, the
+controller's block-axis replay across checkpoint restore, and the
+run-log rendering of block decisions.
+
+`hypothesis` is an optional dev dependency (pyproject `[dev]` extra); the
+property half of this module skips cleanly when it isn't installed — the
+deterministic half always runs (same split as tests/test_bfp_properties.py
+vs test_bfp.py, kept in one file here because every test is about the one
+axis).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import HBFPConfig, bfp
+from repro.core.hbfp_ops import hbfp_matmul as sim_matmul
+from repro.data import SyntheticLM
+from repro.kernels import autotune, ops, ref
+from repro.kernels.common import role_stream_salt
+from repro.kernels.linear import _role_seed, hbfp_matmul_kernel, resolve_spec
+from repro.models import init_params
+from repro.numerics import (ControllerConfig, PrecisionController, TapConfig,
+                            make_adaptive_train_step)
+from repro.optim import make_schedule
+from repro.train import init_train_state
+from repro.train.trainer import Trainer
+
+
+def _sqnr_db(x, q):
+    x = np.asarray(x, np.float64)
+    e = x - np.asarray(q, np.float64)
+    return 10.0 * np.log10((x * x).sum() / max((e * e).sum(), 1e-300))
+
+
+# ---------------------------------------------------------------------------
+# deterministic invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [4, 8])
+def test_sqnr_monotone_non_increasing_in_block(m):
+    """Finer exponent blocks can only help: the fine grid refines the
+    coarse one (scales are powers of two, smaller groups have ≤ amax), so
+    SQNR is monotone non-increasing as b grows at fixed mantissa."""
+    x = np.asarray(jax.random.normal(jax.random.key(0), (256, 256))) \
+        * np.exp(np.asarray(jax.random.normal(jax.random.key(1),
+                                              (256, 1))))  # per-row ranges
+    sq = [_sqnr_db(x, bfp.quantize(jnp.asarray(x), m, (1, b)))
+          for b in (8, 16, 64, 256)]
+    for fine, coarse in zip(sq, sq[1:]):
+        assert fine >= coarse - 1e-9, sq
+    assert sq[0] > sq[-1]  # and strictly better somewhere on real data
+
+
+@pytest.mark.parametrize("m,b", [(4, 16), (4, 32), (8, 16), (8, 32)])
+def test_sim_and_pallas_bit_identical_per_block_cell(m, b):
+    """The production sim path (hbfp_ops, with_block cfg) and the fused
+    Pallas path (kernels.linear) agree bit-for-bit — forward and both
+    gradients — at sub-tile block sizes (nearest rounding; shapes within
+    one kernel tile so sub-grouping is the only dataflow difference)."""
+    cfg = HBFPConfig(m, 16).with_block(b)
+    x = jax.random.normal(jax.random.key(2), (40, 64))
+    w = jax.random.normal(jax.random.key(3), (64, 96)) * 0.1
+
+    def loss(f):
+        def g(x, w):
+            y = f(x, w, cfg)
+            return (y * jnp.sin(y)).sum()
+        return jax.value_and_grad(g, argnums=(0, 1))
+
+    (ls, (dxs, dws)) = jax.jit(loss(sim_matmul))(x, w)
+    (lk, (dxk, dwk)) = jax.jit(loss(hbfp_matmul_kernel))(x, w)
+    np.testing.assert_array_equal(np.asarray(ls), np.asarray(lk))
+    np.testing.assert_array_equal(np.asarray(dxs), np.asarray(dxk))
+    np.testing.assert_array_equal(np.asarray(dws), np.asarray(dwk))
+
+
+def test_block_zero_is_whole_tile_back_compat():
+    """block=0 through the kernel ops is bit-identical to not passing a
+    block at all — the sentinel keeps every pre-block caller unchanged."""
+    x = jax.random.normal(jax.random.key(4), (48, 64))
+    w = jax.random.normal(jax.random.key(5), (64, 32))
+    y0 = ops.hbfp_matmul(x, w, mantissa_bits=4)
+    yb = ops.hbfp_matmul(x, w, mantissa_bits=4, block=0)
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(yb))
+
+
+def test_requantize_across_block_change_matches_direct():
+    """Segment switches requantize from the wide master at the new b —
+    never chain b→b' — because chaining through the coarse grid loses
+    information the fine grid still has. The kernels see fresh f32 inputs
+    each call, so a call at b' after calls at b equals the direct-b'
+    oracle (autotune cells are keyed by b and don't leak)."""
+    x = jax.random.normal(jax.random.key(6), (64, 64)) * 3.0
+    w = jax.random.normal(jax.random.key(7), (64, 64)) * 0.2
+    ops.hbfp_matmul(x, w, mantissa_bits=4, block=32)      # prior segment
+    y = ops.hbfp_matmul(x, w, mantissa_bits=4, block=16)  # after b→b'
+    np.testing.assert_array_equal(
+        np.asarray(y),
+        np.asarray(ref.hbfp_matmul_ref(x, w, mantissa_bits=4, block=16)))
+    # and the master law is not vacuous: chaining b→b' diverges from
+    # direct quantization at b' (coarse rounding already moved the values)
+    master = np.asarray(jax.random.normal(jax.random.key(8), (64, 256)))
+    direct = bfp.quantize(jnp.asarray(master), 4, (1, 16))
+    chained = bfp.quantize(bfp.quantize(jnp.asarray(master), 4, (1, 64)),
+                           4, (1, 16))
+    assert not np.array_equal(np.asarray(direct), np.asarray(chained))
+
+
+def test_autotune_keys_and_tiles_carry_block():
+    """Every (op, shape, dtype, m) autotune cell splits per block size,
+    and align_tiles rounds tile edges up to block multiples so sub-groups
+    divide kernel tiles exactly."""
+    k0 = autotune.cache_key("matmul_fwd", 128, 256, 512, "float32", 8)
+    k16 = autotune.cache_key("matmul_fwd", 128, 256, 512, "float32", 8, 16)
+    assert k0 != k16 and k0.endswith("/b0") and k16.endswith("/b16")
+    assert autotune.align_tiles((100, 128, 65), 32) == (128, 128, 96)
+    assert autotune.align_tiles((100, 128, 65), 0) == (100, 128, 65)
+    # resolve_spec threads cfg's block into the KernelSpec the vjp uses
+    assert resolve_spec(HBFPConfig(8, 16).with_block(16), 64, 64, 64).block \
+        == 16
+    assert resolve_spec(HBFPConfig(8, 16), 64, 64, 64).block == 0
+
+
+def test_stream_salt_threads_block():
+    """The per-role rounding-stream salt is 0 iff BOTH the width and the
+    block match the forward's — a role at its own block must not consume
+    another role's stochastic draws (DESIGN.md §11, §13)."""
+    assert role_stream_salt("wgrad", 8, 8, 0, 0) == 0
+    assert role_stream_salt("wgrad", 8, 8, 16, 16) == 0
+    s_w = role_stream_salt("wgrad", 10, 8, 0, 0)     # width diverged
+    s_b = role_stream_salt("wgrad", 8, 8, 16, 0)     # block diverged
+    s_wb = role_stream_salt("wgrad", 10, 8, 16, 0)   # both
+    assert 0 not in (s_w, s_b, s_wb)
+    assert len({s_w, s_b, s_wb}) == 3
+    assert role_stream_salt("dgrad", 8, 8, 16, 0) != s_b  # role-specific
+    for s in (s_w, s_b, s_wb):
+        assert 0 <= s <= 0x7FFFFFFF
+    # and the kernel path folds it into the seed (block ≠ base_block ⇒
+    # a different stream even at equal widths)
+    seed = jnp.zeros((1, 1), jnp.int32)
+    s0 = _role_seed(seed, "wgrad", 8, 8, 16, 16)
+    s1 = _role_seed(seed, "wgrad", 8, 8, 16, 0)
+    assert np.array_equal(np.asarray(s0), np.asarray(seed))
+    assert not np.array_equal(np.asarray(s1), np.asarray(seed))
+
+
+# ---------------------------------------------------------------------------
+# controller: block decisions replay bit-identically
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_controller_block_decisions_bit_identical_across_restore(tmp_path):
+    """Acceptance: a controller-driven *block* run (mantissa ladder pinned
+    so every trigger lands on the block axis) preempted mid-flight resumes
+    with a bit-identical decision stream, block map, and final params."""
+    arch = get_arch("yi-9b").smoke()
+    pipe = SyntheticLM(arch.vocab_size, 17, 4, seed=3)
+    lrs = make_schedule("constant", base_lr=2e-3, warmup_steps=2,
+                        total_steps=30)
+    base = HBFPConfig(4, 16).with_block(64)
+    cconf = ControllerConfig(ladder=(4,), block_ladder=(16, 64),
+                             patience=2, cooldown=1)
+
+    def build():
+        ctrl = PrecisionController(cconf, base_bits=4, base_block=64)
+        step = make_adaptive_train_step(arch, base, lrs, controller=ctrl,
+                                        tap=TapConfig(cadence=3))
+        return step, ctrl
+
+    step_a, ctrl_a = build()
+    tr = Trainer(train_step=step_a,
+                 init_state=init_train_state(jax.random.key(0), arch,
+                                             init_params),
+                 data_fn=pipe.batch, ckpt_dir=None, hbfp=base,
+                 controller=ctrl_a, seed=0)
+    s_straight, _ = tr.run(20, log_every=0)
+    assert any(d["axis"] == "block" for d in ctrl_a.log), ctrl_a.log
+    assert all(d["action"] == "shrink_block" for d in ctrl_a.log
+               if d["axis"] == "block")
+
+    d = str(tmp_path / "ckpt")
+    step_b, ctrl_b = build()
+    tr1 = Trainer(train_step=step_b,
+                  init_state=init_train_state(jax.random.key(0), arch,
+                                              init_params),
+                  data_fn=pipe.batch, ckpt_dir=d, ckpt_every=9, hbfp=base,
+                  controller=ctrl_b, seed=0)
+    with pytest.raises(RuntimeError, match="simulated preemption"):
+        tr1.run(20, fail_at_step=14, log_every=0)
+
+    step_c, ctrl_c = build()   # fresh process: empty controller
+    tr2 = Trainer(train_step=step_c,
+                  init_state=init_train_state(jax.random.key(0), arch,
+                                              init_params),
+                  data_fn=pipe.batch, ckpt_dir=d, ckpt_every=9, hbfp=base,
+                  controller=ctrl_c, seed=0)
+    assert ctrl_c.log == [e for e in ctrl_a.log if e["step"] < 9]
+    s_resumed, _ = tr2.run(20, log_every=0)
+
+    assert ctrl_c.log == ctrl_a.log
+    assert ctrl_c.blocks == ctrl_a.blocks
+    assert ctrl_c.to_meta() == ctrl_a.to_meta()
+    assert ctrl_a.to_meta()["base_block"] == 64  # block state serialized
+    for a, b in zip(jax.tree.leaves(s_resumed.params),
+                    jax.tree.leaves(s_straight.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_block_schedule_replay_bit_identical(tmp_path):
+    """Acceptance: a *schedule*-driven block run (b=16→32 mid-run, width
+    4→8 later — both axes cross segment boundaries, each re-narrowing
+    weights from the wide master) preempted at step 14 and resumed from
+    the step-9 checkpoint ends bit-identical to the uninterrupted run."""
+    from repro.precision import parse_policy
+    from repro.train import make_step
+    arch = get_arch("yi-9b").smoke()
+    pipe = SyntheticLM(arch.vocab_size, 17, 4, seed=3)
+    lrs = make_schedule("constant", base_lr=2e-3, warmup_steps=2,
+                        total_steps=20)
+    pol = parse_policy("4@0,8@12; b=16@0,b=32@8", total_steps=20)
+    assert pol.block_schedule == ((0, 16), (8, 32))
+    step = make_step(arch, pol, lrs)
+
+    tr0 = Trainer(train_step=step,
+                  init_state=init_train_state(jax.random.key(0), arch,
+                                              init_params),
+                  data_fn=pipe.batch, ckpt_dir=None, seed=0)
+    s_straight, _ = tr0.run(20, log_every=0)
+
+    d = str(tmp_path / "ckpt")
+    tr1 = Trainer(train_step=step,
+                  init_state=init_train_state(jax.random.key(0), arch,
+                                              init_params),
+                  data_fn=pipe.batch, ckpt_dir=d, ckpt_every=9, seed=0)
+    with pytest.raises(RuntimeError, match="simulated preemption"):
+        tr1.run(20, fail_at_step=14, log_every=0)
+    tr2 = Trainer(train_step=step,
+                  init_state=init_train_state(jax.random.key(0), arch,
+                                              init_params),
+                  data_fn=pipe.batch, ckpt_dir=d, ckpt_every=9, seed=0)
+    assert tr2.start_step == 9   # resumes inside the b=32 segment
+    s_resumed, _ = tr2.run(20, log_every=0)
+    for a, b in zip(jax.tree.leaves(s_resumed.params),
+                    jax.tree.leaves(s_straight.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_report_renders_block_decisions(tmp_path, capsys):
+    """`report --follow` renders block-axis decisions as [BLOCK] lines
+    with b-prefixed endpoints, next to the mantissa [WIDEN] lines; the
+    decision table prefixes each row's endpoints by its axis."""
+    from repro.analysis.report import decision_table, follow_runlog
+    evs = [{"kind": "precision/decision", "step": 12,
+            "data": {"layer": "blocks.0.mlp.up", "action": "widen",
+                     "axis": "m", "from": 4, "to": 8, "reason": "sqnr<floor",
+                     "sqnr_db": 14.2, "clip_frac": 0.0}},
+           {"kind": "precision/decision", "step": 15,
+            "data": {"layer": "blocks.0.mlp.up", "action": "shrink_block",
+                     "axis": "block", "from": 64, "to": 16,
+                     "reason": "ftz>thr", "sqnr_db": 31.0,
+                     "clip_frac": 0.01}}]
+    p = tmp_path / "runlog.jsonl"
+    p.write_text("".join(json.dumps(e) + "\n" for e in evs))
+    follow_runlog(str(p))
+    out = capsys.readouterr().out
+    assert "[WIDEN] step 12 blocks.0.mlp.up: m4 -> m8" in out
+    assert "[BLOCK] step 15 blocks.0.mlp.up: b64 -> b16" in out
+    assert "shrink_block: ftz>thr" in out
+    table = decision_table([dict(e["data"], step=e["step"]) for e in evs])
+    assert "| m4 | m8 |" in table and "| b64 | b16 |" in table
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (the optional half: unlike test_bfp_properties.py,
+# which importorskips the whole module, only THIS section skips without
+# hypothesis — the deterministic pins above always run)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given
+    from hypothesis.extra import numpy as hnp
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    hypothesis.settings.register_profile(
+        "ci", deadline=None, max_examples=25,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow])
+    hypothesis.settings.load_profile("ci")
+
+    FINITE = hnp.arrays(
+        np.float32, hnp.array_shapes(min_dims=2, max_dims=2, min_side=1,
+                                     max_side=40),
+        elements=st.floats(np.float32(-1e20), np.float32(1e20), width=32,
+                           allow_nan=False, allow_infinity=False))
+
+    @given(FINITE, st.sampled_from([4, 8, 12]), st.sampled_from([4, 16, 32]))
+    def test_pad_and_slice_agrees_on_valid_region(x, m, b):
+        """Zero-padding the feature axis out to any length never perturbs
+        the valid region: zeros don't move a block's amax, and zero
+        quantizes to zero — the exactness pad-and-slice in kernels/ops.py
+        relies on."""
+        xt = jnp.asarray(x)
+        q = bfp.quantize(xt, m, (1, b))
+        pad = (-x.shape[1]) % b + b  # past the boundary: a whole zero block
+        xp = jnp.pad(xt, ((0, 0), (0, pad)))
+        qp = bfp.quantize(xp, m, (1, b))
+        assert jnp.array_equal(qp[:, :x.shape[1]], q)
+        assert not jnp.any(qp[:, x.shape[1]:])
+
+    @given(FINITE, st.sampled_from([4, 8]), st.sampled_from([2, 8, 16]))
+    def test_idempotent_at_every_block(x, m, b):
+        """Q_b(Q_b(x)) == Q_b(x) bit-exactly at every block size (nearest)
+        — the weight-requantize path stays a numeric no-op under
+        with_block."""
+        q1 = bfp.quantize(jnp.asarray(x), m, (1, b))
+        q2 = bfp.quantize(q1, m, (1, b))
+        assert jnp.array_equal(q1, q2)
+
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from([4, 8, 12]),
+           st.sampled_from([0, 8, 16, 64]))
+    def test_stream_salt_zero_iff_at_base(seed, m, b):
+        """salt == 0 exactly when (width, block) match the forward's base
+        — the bit-identity condition for uniform-policy replays."""
+        salt = role_stream_salt("wgrad", m, 8, b, 0)
+        assert (salt == 0) == (m == 8 and b == 0)
+        assert 0 <= salt <= 0x7FFFFFFF
+else:
+    def test_hypothesis_properties_skipped():
+        pytest.skip("hypothesis not installed (optional dev dependency)")

@@ -448,36 +448,60 @@ def test_per_role_policy_trains_with_both_widths_in_taps():
     assert min(g_sqnr) > 28.0, g_sqnr   # 8-bit measurements
 
 
-def test_attn_role_widths_keep_flash_gate_off():
-    """Per-role attention widths (attn_qk/attn_pv) stay on the sim mha
-    path — the flash kernel runs both contractions at one width, so the
-    gate must not engage and silently drop the role width."""
+def test_attn_role_widths_run_on_flash_path():
+    """Per-role attention widths (attn_qk/attn_pv) now run ON the fused
+    flash path: the gate no longer falls back, and the FlashSpec carries
+    each contraction's own width. Stochastic rounding keeps the fallback
+    (the flash kernels are deterministic)."""
+    from repro.kernels import hbfp_flash_attn
     from repro.models import attention, transformer
     from repro.models.layers import Ctx
 
+    specs = []
+    orig_vjp = hbfp_flash_attn.flash_attention_vjp
+
+    def spy(spec, *a):
+        specs.append(spec)
+        return orig_vjp(spec, *a)
+
+    arch = _tiny_arch(kernel_backend="pallas")
+    batch = _batch()
+    params = init_params(jax.random.key(0), arch)
+    try:
+        hbfp_flash_attn.flash_attention_vjp = spy
+        seg = parse_policy("8; attn_qk=4; backend=pallas").resolve_segment(0)
+        logits, _ = transformer.forward(params, batch, arch,
+                                        Ctx(policy=seg))
+        assert np.isfinite(float(jnp.mean(logits)))
+        assert specs, "attn role widths must take the flash path now"
+        assert all(sp.m_qk == 4 and sp.m_pv == 0 for sp in specs)
+        specs.clear()
+        # both roles resolve independently
+        seg2 = parse_policy(
+            "8; attn_qk=4; attn_pv=12; backend=pallas").resolve_segment(0)
+        transformer.forward(params, batch, arch, Ctx(policy=seg2))
+        assert all(sp.m_qk == 4 and sp.m_pv == 12 for sp in specs)
+    finally:
+        hbfp_flash_attn.flash_attention_vjp = orig_vjp
+
+    # still-gated fallback: stochastic rounding never engages flash
     called = {"flash": False}
 
     def boom(*a, **k):
         called["flash"] = True
         raise AssertionError("flash path must not engage")
 
-    arch = _tiny_arch(kernel_backend="pallas")
-    batch = _batch()
     orig = attention.flash_mha
     try:
         attention.flash_mha = boom
-        seg = parse_policy("8; attn_qk=4; backend=pallas").resolve_segment(0)
-        params = init_params(jax.random.key(0), arch)
-        logits, _ = transformer.forward(params, batch, arch,
-                                        Ctx(policy=seg))
-        assert np.isfinite(float(jnp.mean(logits)))
-        # control: without the attn role the same config takes flash
-        seg2 = parse_policy("8; backend=pallas").resolve_segment(0)
-        with pytest.raises(AssertionError, match="must not engage"):
-            transformer.forward(params, batch, arch, Ctx(policy=seg2))
+        seg3 = parse_policy(
+            "8; backend=pallas",
+            base=HBFPConfig(8, 16, rounding="stochastic")).resolve_segment(0)
+        transformer.forward(params, batch, arch,
+                            Ctx(policy=seg3, key=jax.random.key(1)))
     finally:
         attention.flash_mha = orig
-    assert called["flash"]
+    assert not called["flash"]
 
 
 def test_serving_honors_policy_overrides():
