@@ -14,8 +14,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (design_space, kernel_bench, numerics_bench,
-                            obs_bench, table1_narrow_fp, table2_image_cls,
-                            table3_lstm_lm, throughput_model)
+                            obs_bench, serve_bench, table1_narrow_fp,
+                            table2_image_cls, table3_lstm_lm,
+                            throughput_model)
     suites = [
         ("table1_narrow_fp", table1_narrow_fp),
         ("table2_image_cls", table2_image_cls),
@@ -25,6 +26,7 @@ def main() -> None:
         ("kernel_bench", kernel_bench),
         ("numerics_overhead", numerics_bench),
         ("obs_overhead", obs_bench),
+        ("serve_traffic", serve_bench),
     ]
     csv = ["name,value,derived"]
     for name, mod in suites:

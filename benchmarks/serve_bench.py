@@ -1,0 +1,247 @@
+"""Serving-plane traffic benchmark (DESIGN.md §14).
+
+Two measurements over the `serve.ServeEngine` with its paged BFP KV
+cache:
+
+  * **stage microbench** — the three disaggregated, separately jit'd
+    stages timed in isolation: one-shot *prefill* (prompt → prefix
+    cache), chunked-prefill *extend* (one chunk through the multi-token
+    decode graph), *insert* (prefix → lane page scatter), and the batched
+    *generate* tick. These are the unit costs a capacity model composes.
+
+  * **Poisson traffic** — seeded Poisson arrivals drive the engine at
+    ≥ 2 offered rates (requests/s) against wall-clock time; per-request
+    TTFT and tokens/s percentiles (p50/p95/p99) come from the engine's
+    own `request_stats`, queue depth / lane utilization / page-pool
+    occupancy are sampled every tick. The high rate is chosen to
+    overload the lane pool so the FIFO queue is exercised.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+
+--smoke (the CI lane): one light rate, few requests, nothing written —
+asserts at least one completion and finite percentiles, so CI fails
+fast when the serving plane regresses. The full run writes
+`BENCH_serve.json` at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import HBFPConfig
+from repro.models import init_params
+from repro.obs.trace import time_fn
+from repro.serve import ServeEngine
+from repro.train.serve_step import prefill_to_decode_cache
+
+_OUT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serve.json")
+
+ARCH = "yi-9b"
+MAX_BATCH = 4
+CTX_LEN = 64
+
+
+def _pct(xs, q):
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(round(q * (len(s) - 1))))]
+
+
+def summarize(xs, qs=(0.50, 0.95, 0.99)):
+    """Nearest-rank percentiles of a sample (no interpolation — stable
+    for the small per-rate request counts this bench runs)."""
+    if not xs:
+        return {f"p{int(q * 100)}": float("nan") for q in qs}
+    return {f"p{int(q * 100)}": _pct(xs, q) for q in qs}
+
+
+def make_engine(**kw):
+    arch = get_arch(ARCH).smoke()
+    params = init_params(jax.random.key(0), arch)
+    return ServeEngine(arch, params, HBFPConfig(8, 16),
+                       max_batch=MAX_BATCH, ctx_len=CTX_LEN, **kw)
+
+
+def stage_bench(eng, log, smoke):
+    """Per-stage unit costs (min-of-n, each call synced)."""
+    n = 3 if smoke else 10
+    plen, cs = 24, 8
+    toks = jnp.ones((1, plen), jnp.int32)
+    t_prefill = time_fn(lambda: eng._prefill(eng.params, toks, plen=plen),
+                        n=n, warmup=2, sync=jax.block_until_ready,
+                        reduce="min", sync_each=True)
+    # one chunk through the extension (chunked-prefill) stage
+    if eng._pf_empty is None:
+        from repro.models import make_cache
+        eng._pf_empty = make_cache(eng.params, eng.arch, 1, eng.ctx_len)
+    chunk = jnp.ones((1, cs), jnp.int32)
+    pos = jnp.arange(cs, dtype=jnp.int32)[None]
+    t_extend = time_fn(
+        lambda: eng._extend(eng.params, chunk, pos, eng._pf_empty),
+        n=n, warmup=2, sync=jax.block_until_ready,
+        reduce="min", sync_each=True)
+    _, pcache = eng._prefill(eng.params, toks, plen=plen)
+    pcache = prefill_to_decode_cache(pcache, eng.arch, eng.C)
+    if eng.paged:
+        import numpy as np
+        row = np.full((eng.NP,), -1, np.int32)
+        row[:eng.NP] = np.arange(eng.NP)
+        ids = jnp.asarray(row)
+        t_insert = time_fn(
+            lambda: eng._insert(eng.cache, pcache, jnp.int32(0), ids),
+            n=n, warmup=2, sync=jax.block_until_ready,
+            reduce="min", sync_each=True)
+    else:
+        t_insert = time_fn(
+            lambda: eng._insert(eng.cache, pcache, jnp.int32(0)),
+            n=n, warmup=2, sync=jax.block_until_ready,
+            reduce="min", sync_each=True)
+    tok = jnp.zeros((MAX_BATCH, 1), jnp.int32)
+    gpos = jnp.full((MAX_BATCH, 1), plen, jnp.int32)
+    rids = jnp.arange(MAX_BATCH, dtype=jnp.int32)
+    t_gen = time_fn(
+        lambda: eng._generate(eng.params, eng.cache, tok, gpos, rids),
+        n=n, warmup=2, sync=jax.block_until_ready,
+        reduce="min", sync_each=True)
+    log(f"stage prefill  ({plen:>2} tok, one-shot): {t_prefill:9.0f} us")
+    log(f"stage extend   ({cs:>2} tok chunk)     : {t_extend:9.0f} us")
+    log(f"stage insert   (lane scatter)       : {t_insert:9.0f} us")
+    log(f"stage generate ({MAX_BATCH} lanes, batched) : {t_gen:9.0f} us")
+    return {"prefill_us": round(t_prefill, 1),
+            "extend_us": round(t_extend, 1),
+            "insert_us": round(t_insert, 1),
+            "generate_us": round(t_gen, 1),
+            "prefill_tokens": plen, "extend_chunk": cs,
+            "generate_lanes": MAX_BATCH}
+
+
+def traffic(eng, rate, n_req, seed, log):
+    """Drive `n_req` Poisson(rate)-arrival requests against wall-clock
+    time; returns latency/throughput percentiles + per-tick load
+    samples. Greedy decode: the measured path is the production one."""
+    rng = random.Random(seed)
+    arrivals, t = [], 0.0
+    for _ in range(n_req):
+        t += rng.expovariate(rate)
+        arrivals.append(t)
+    vocab = eng.arch.vocab_size
+    prompts = [[rng.randrange(1, vocab)
+                for _ in range(rng.randint(4, 14))] for _ in range(n_req)]
+    maxnew = [rng.randint(8, 24) for _ in range(n_req)]
+
+    # warm every jit variant the trace will touch (one-shot prefill
+    # compiles per prompt length) so percentiles measure steady state,
+    # not compile latency
+    for p in {len(p): p for p in prompts}.values():
+        eng.submit(p, 2)
+    eng.drain()
+    eng.request_stats.clear()
+    pre0 = int(eng.metrics.counter("serve_preemptions_total").value)
+
+    clock = eng.recorder.clock
+    t0 = clock.perf()
+    i, ticks = 0, 0
+    q_depth, lanes, occ = [], [], []
+    while len(eng.request_stats) < n_req:
+        now = clock.perf() - t0
+        while i < n_req and arrivals[i] <= now:
+            eng.submit(prompts[i], maxnew[i])
+            i += 1
+        idle = not any(eng.slots) and not eng.pending \
+            and eng._inflight is None
+        if idle and i < n_req:
+            time.sleep(min(arrivals[i] - now, 0.002))
+            continue
+        eng.step()
+        ticks += 1
+        q_depth.append(len(eng.pending))
+        lanes.append(sum(s is not None for s in eng.slots))
+        if eng.paged:
+            occ.append(eng.pool.occupancy())
+    dur = clock.perf() - t0
+
+    stats = list(eng.request_stats.values())
+    ttft = [s["ttft_s"] for s in stats]
+    tps = [s["tok_per_s"] for s in stats]
+    toks = sum(s["tokens"] for s in stats)
+    rec = {"rate_req_s": rate, "n_requests": n_req,
+           "duration_s": round(dur, 3),
+           "tokens_total": toks,
+           "goodput_tok_s": round(toks / dur, 1) if dur > 0 else 0.0,
+           "ttft_s": {k: round(v, 4) for k, v in summarize(ttft).items()},
+           "tok_per_s": {k: round(v, 1) for k, v in summarize(tps).items()},
+           "queue_depth": {k: v for k, v in summarize(q_depth).items()},
+           "lane_util": {k: round(v / MAX_BATCH, 2)
+                         for k, v in summarize(lanes).items()},
+           "page_occupancy": {k: round(v, 3)
+                              for k, v in summarize(occ).items()}
+           if occ else None,
+           "preemptions": int(eng.metrics.counter(
+               "serve_preemptions_total").value) - pre0,
+           "ticks": ticks}
+    log(f"rate {rate:5.1f} req/s: {n_req} reqs in {dur:6.2f}s  "
+        f"ttft p50/p95/p99 {rec['ttft_s']['p50'] * 1e3:6.1f}/"
+        f"{rec['ttft_s']['p95'] * 1e3:6.1f}/"
+        f"{rec['ttft_s']['p99'] * 1e3:6.1f} ms  "
+        f"goodput {rec['goodput_tok_s']:7.1f} tok/s  "
+        f"queue p95 {rec['queue_depth']['p95']}  "
+        f"lane-util p50 {rec['lane_util']['p50']:.2f}")
+    return rec
+
+
+def run(log=print, smoke: bool = False):
+    # stage microbench on a dedicated engine (paged, the default)
+    eng = make_engine(prefill_chunk=8)
+    stages = stage_bench(eng, log, smoke)
+
+    # low = uncontended, mid = busy, high = overload (queue exercised)
+    rates = [4.0] if smoke else [4.0, 32.0, 256.0]
+    n_req = 4 if smoke else 24
+    runs = []
+    for k, rate in enumerate(rates):
+        e = make_engine(prefill_chunk=8, async_prefill=False)
+        runs.append(traffic(e, rate, n_req, seed=100 + k, log=log))
+
+    if smoke:
+        assert all(r["n_requests"] == n_req for r in runs)
+        for r in runs:
+            for v in list(r["ttft_s"].values()) + list(
+                    r["tok_per_s"].values()):
+                assert v == v and v != float("inf"), "non-finite percentile"
+        log("smoke OK (no files written)")
+        return []
+
+    record = {"arch": ARCH + "-smoke",
+              "backend": jax.default_backend(),
+              "max_batch": MAX_BATCH, "ctx_len": CTX_LEN,
+              "paged": True, "page_size": eng.page_size,
+              "n_pages": eng.n_pages,
+              "stages_us": stages,
+              "traffic": runs,
+              "note": "Poisson open-loop arrivals against wall-clock "
+                      "time; TTFT/tok-per-s percentiles from the "
+                      "engine's request_stats, queue/lane/page samples "
+                      "taken every tick. Stage times are min-of-n with "
+                      "per-call sync (unit costs, not pipelined)."}
+    with open(_OUT, "w") as f:
+        json.dump(record, f, indent=1)
+    log(f"recorded -> {_OUT}")
+    hi = runs[-1]
+    return [("stage_generate_us", stages["generate_us"], 0),
+            ("ttft_p95_s_hi_rate", hi["ttft_s"]["p95"], 4),
+            ("goodput_tok_s_hi_rate", hi["goodput_tok_s"], 1)]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one light rate, few requests, no files written")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

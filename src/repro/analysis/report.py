@@ -5,6 +5,7 @@ JSONL run-log live (DESIGN.md §12).
     PYTHONPATH=src python -m repro.analysis.report results/dryrun.json
     PYTHONPATH=src python -m repro.analysis.report --numerics results/numerics.json
     PYTHONPATH=src python -m repro.analysis.report --follow results/runlog.jsonl
+    PYTHONPATH=src python -m repro.analysis.report --serve BENCH_serve.json
 
 `--follow` renders events as they arrive — progress lines, controller
 widen/narrow decisions with their triggering signal, the per-layer
@@ -126,6 +127,44 @@ def render_numerics(path):
     print(decision_table(ctrl.get("log", [])))
 
 
+def serve_table(record):
+    """Render BENCH_serve.json (benchmarks/serve_bench) into the stage
+    unit-cost list + per-rate traffic table."""
+    s = record.get("stages_us", {})
+    lines = [f"paged KV: page_size {record.get('page_size')}, "
+             f"{record.get('n_pages')} pages, {record.get('max_batch')} "
+             f"lanes x ctx {record.get('ctx_len')} "
+             f"({record.get('backend')})", "",
+             f"stage unit costs: prefill {s.get('prefill_us', 0):.0f} us "
+             f"({s.get('prefill_tokens')} tok) | extend "
+             f"{s.get('extend_us', 0):.0f} us ({s.get('extend_chunk')}-tok "
+             f"chunk) | insert {s.get('insert_us', 0):.0f} us | generate "
+             f"{s.get('generate_us', 0):.0f} us "
+             f"({s.get('generate_lanes')} lanes)", "",
+             "| rate req/s | reqs | goodput tok/s | ttft p50/p95/p99 ms | "
+             "tok/s p50 | queue p95 | lane util p95 | pages p95 | preempt |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in record.get("traffic", []):
+        t = r["ttft_s"]
+        occ = r.get("page_occupancy")
+        pages = "-" if occ is None else f"{occ['p95']:.2f}"
+        lines.append(
+            f"| {r['rate_req_s']:g} | {r['n_requests']} | "
+            f"{r['goodput_tok_s']:g} | {t['p50'] * 1e3:.1f} / "
+            f"{t['p95'] * 1e3:.1f} / {t['p99'] * 1e3:.1f} | "
+            f"{r['tok_per_s']['p50']:g} | {r['queue_depth']['p95']} | "
+            f"{r['lane_util']['p95']:.2f} | {pages} | "
+            f"{r.get('preemptions', 0)} |")
+    return "\n".join(lines)
+
+
+def render_serve(path):
+    with open(path) as f:
+        record = json.load(f)
+    print("### Serving traffic benchmark\n")
+    print(serve_table(record))
+
+
 def _follow_lines(path, watch=False, interval=0.5):
     """Yield complete lines from `path`; at EOF either stop (default) or
     poll for appended lines (`watch=True`). A partial trailing line (the
@@ -225,6 +264,10 @@ def main():
     if len(sys.argv) > 1 and sys.argv[1] == "--numerics":
         render_numerics(sys.argv[2] if len(sys.argv) > 2
                         else "results/numerics.json")
+        return
+    if len(sys.argv) > 1 and sys.argv[1] == "--serve":
+        render_serve(sys.argv[2] if len(sys.argv) > 2
+                     else "BENCH_serve.json")
         return
     path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
     with open(path) as f:

@@ -1,4 +1,6 @@
 """Transformer / MoE / SSM / xLSTM model stacks with HBFP dot products."""
+from repro.models.attention import KVCache, PagedKVCache
 from repro.models.layers import Ctx
 from repro.models.transformer import (decode_step, forward, init_params,
-                                      loss_fn, make_cache, prefill)
+                                      lane_capacity, loss_fn, make_cache,
+                                      make_paged_cache, prefill)

@@ -43,6 +43,27 @@ class KVCache(NamedTuple):
     v_exp: Optional[jax.Array] = None
 
 
+class PagedKVCache(NamedTuple):
+    """Page-pooled KV cache (DESIGN.md §14): a shared pool of fixed-size
+    token pages plus a per-lane page table, replacing the dense
+    worst-case [B, C, ...] slab. A lane's logical slot `s` lives in pool
+    page `page_table[b, s // ps]` at offset `s % ps`; `-1` page-table
+    entries are unallocated (reads see empty slots, writes are dropped).
+    Pages are allocated on demand by the serving engine (serve/paged_cache)
+    and sized to the BFP exponent-block granularity, so a quantized page
+    carries its K/V mantissas AND their shared exponents as one unit.
+
+    Shapes below are per-layer (inside the layer scan); the stacked cache
+    pytree carries a leading L on every field, page_table included (same
+    values every layer — the scan needs uniform leading axes)."""
+    k: jax.Array           # [P, Hkv, ps, hd] pool (fp, or int8 mantissas)
+    v: jax.Array           # [P, Hkv, ps, hd]
+    slot_pos: jax.Array    # [P, ps] absolute position per slot (-1 empty)
+    page_table: jax.Array  # [B, NP] int32 pool page ids (-1 unallocated)
+    k_exp: Optional[jax.Array] = None   # int8 [P, Hkv, ps] (BFP mode)
+    v_exp: Optional[jax.Array] = None
+
+
 def _acfg(ctx):
     cfg = ctx.cfg
     return cfg if (cfg is not None and cfg.quantize_attention) else None
@@ -165,6 +186,91 @@ def mha(q, k, v, qpos, kpos, ctx, *, cap=None, window=None,
 
 
 # ----------------------------------------------------------------------------
+# Cache append (slab and paged): S >= 1 tokens into ring slots pos % C
+# ----------------------------------------------------------------------------
+
+def _slab_append(cache: KVCache, k, v, tok_pos, bfp_cache: bool, dtype):
+    """Write S tokens into the dense [B, Hkv, C, hd] lane slab and return
+    (new_cache, k_dense, v_dense, kpos) for attention. k/v: [B, Hkv, S, hd];
+    tok_pos: [B, S]."""
+    B = k.shape[0]
+    C = cache.k.shape[2]
+    slot = tok_pos % C                                   # [B, S]
+    bidx = jnp.arange(B)[:, None]                        # [B, 1]
+    # advanced-index write: target [B, S, Hkv, *] (batch dims lead)
+    kt = jnp.swapaxes(k, 1, 2)                           # [B, S, Hkv, hd]
+    vt = jnp.swapaxes(v, 1, 2)
+    if bfp_cache:
+        kq, ke = quantize_kv_vec(kt)
+        vq, ve = quantize_kv_vec(vt)
+        nk = cache.k.at[bidx, :, slot].set(kq)
+        nv = cache.v.at[bidx, :, slot].set(vq)
+        nke = cache.k_exp.at[bidx, :, slot].set(ke)
+        nve = cache.v_exp.at[bidx, :, slot].set(ve)
+        npos = cache.slot_pos.at[bidx, slot].set(tok_pos)
+        new_cache = KVCache(nk, nv, npos, nke, nve)
+        kd = dequantize_kv(nk, nke, dtype)
+        vd = dequantize_kv(nv, nve, dtype)
+    else:
+        nk = cache.k.at[bidx, :, slot].set(kt)
+        nv = cache.v.at[bidx, :, slot].set(vt)
+        npos = cache.slot_pos.at[bidx, slot].set(tok_pos)
+        new_cache = KVCache(nk, nv, npos)
+        kd, vd = nk, nv
+    return new_cache, kd, vd, npos
+
+
+def _paged_append(cache: PagedKVCache, k, v, tok_pos, bfp_cache: bool,
+                  dtype):
+    """Paged write + gather (DESIGN.md §14). Writes route through the page
+    table (slot s -> pool page page_table[b, s // ps], offset s % ps;
+    unallocated entries drop the write); the read gathers exactly this
+    lane's pages back into the dense [B, Hkv, C, hd] view the attention
+    math expects — bit-identical to the slab path by construction (empty
+    pages gather as zeros with slot_pos -1, matching untouched slab
+    slots)."""
+    B = k.shape[0]
+    P, _, ps, _ = cache.k.shape
+    NP = cache.page_table.shape[1]
+    C = NP * ps
+    slot = tok_pos % C                                   # [B, S]
+    pidx = slot // ps
+    off = slot % ps
+    pid = jnp.take_along_axis(cache.page_table, pidx, axis=1)   # [B, S]
+    pid = jnp.where(pid < 0, P, pid)       # out-of-range => dropped write
+    kt = jnp.swapaxes(k, 1, 2)                           # [B, S, Hkv, hd]
+    vt = jnp.swapaxes(v, 1, 2)
+    if bfp_cache:
+        kt, ke = quantize_kv_vec(kt)
+        vt, ve = quantize_kv_vec(vt)
+        nke = cache.k_exp.at[pid, :, off].set(ke, mode="drop")
+        nve = cache.v_exp.at[pid, :, off].set(ve, mode="drop")
+    else:
+        nke = nve = None
+    nk = cache.k.at[pid, :, off].set(kt, mode="drop")
+    nv = cache.v.at[pid, :, off].set(vt, mode="drop")
+    nsp = cache.slot_pos.at[pid, off].set(tok_pos, mode="drop")
+    new_cache = PagedKVCache(nk, nv, nsp, cache.page_table, nke, nve)
+
+    pt = jnp.where(cache.page_table < 0, P, cache.page_table)   # [B, NP]
+    gather = lambda pool, fill: jnp.take(
+        pool, pt, axis=0, mode="fill", fill_value=fill)
+    kg = gather(nk, 0)                       # [B, NP, Hkv, ps, hd]
+    vg = gather(nv, 0)
+    Hkv, hd = kg.shape[2], kg.shape[4]
+    to_dense = lambda g: g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, C, hd)
+    npos = gather(nsp, -1).reshape(B, C)
+    if bfp_cache:
+        keg = gather(nke, 0).transpose(0, 2, 1, 3).reshape(B, Hkv, C)
+        veg = gather(nve, 0).transpose(0, 2, 1, 3).reshape(B, Hkv, C)
+        kd = dequantize_kv(to_dense(kg), keg, dtype)
+        vd = dequantize_kv(to_dense(vg), veg, dtype)
+    else:
+        kd, vd = to_dense(kg), to_dense(vg)
+    return new_cache, kd, vd, npos
+
+
+# ----------------------------------------------------------------------------
 # Full attention layer (projections + rotary + cache management)
 # ----------------------------------------------------------------------------
 
@@ -224,28 +330,18 @@ def attention_layer(x, p, ctx, *, n_heads, n_kv_heads, head_dim,
             else:
                 new_cache = KVCache(k=k, v=v, slot_pos=tok_pos)
     else:
-        # decode: S == 1; write into ring slot pos % C
-        C = cache.k.shape[2]
-        pos = tok_pos[:, 0]                              # [B]
-        slot = pos % C
-        bidx = jnp.arange(B)
-        if bfp_cache:
-            kq, ke = quantize_kv_vec(k[:, :, 0])
-            vq, ve = quantize_kv_vec(v[:, :, 0])
-            nk = cache.k.at[bidx, :, slot].set(kq)
-            nv = cache.v.at[bidx, :, slot].set(vq)
-            nke = cache.k_exp.at[bidx, :, slot].set(ke)
-            nve = cache.v_exp.at[bidx, :, slot].set(ve)
-            npos = cache.slot_pos.at[bidx, slot].set(pos)
-            new_cache = KVCache(nk, nv, npos, nke, nve)
-            kd = dequantize_kv(nk, nke, x.dtype)
-            vd = dequantize_kv(nv, nve, x.dtype)
+        # decode / chunked prefill: write the S incoming tokens into their
+        # ring slots (pos % C), then attend the whole query block over the
+        # cache — causality within the chunk falls out of the kp <= qp
+        # mask, so S == 1 (decode) and S > 1 (prefill chunks) share one
+        # path. PagedKVCache routes the same writes/reads through the
+        # page-table indirection (DESIGN.md §14).
+        if isinstance(cache, PagedKVCache):
+            new_cache, kd, vd, npos = _paged_append(cache, k, v, tok_pos,
+                                                    bfp_cache, x.dtype)
         else:
-            nk = cache.k.at[bidx, :, slot].set(k[:, :, 0])
-            nv = cache.v.at[bidx, :, slot].set(v[:, :, 0])
-            npos = cache.slot_pos.at[bidx, slot].set(pos)
-            new_cache = KVCache(nk, nv, npos)
-            kd, vd = nk, nv
+            new_cache, kd, vd, npos = _slab_append(cache, k, v, tok_pos,
+                                                   bfp_cache, x.dtype)
         out = mha(q, kd, vd, tok_pos, npos, ctx, cap=attn_cap, window=window,
                   q_chunk=None)
 

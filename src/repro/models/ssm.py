@@ -111,6 +111,13 @@ def ssm_branch(u, p, ctx, *, n_heads: int, d_state: int, chunk: int = 128,
         h0 = jnp.zeros((B, n_heads, P, N), jnp.float32)
         y, h_end = _chunk_scan(xh_dt, dt, logdecay, Bmf, Cmf, h0, chunk,
                                unroll)
+    elif S > 1:
+        # chunked prefill (DESIGN.md §14): a multi-token step that CARRIES
+        # state — the same chunkwise scan as training, seeded with the
+        # lane's running state instead of zeros
+        (h0,) = state
+        y, h_end = _chunk_scan(xh_dt, dt, logdecay, Bmf, Cmf, h0, chunk,
+                               unroll)
     else:
         (h0,) = state
         # single-step: h = a·h + dt·x⊗B ; y = C·h

@@ -28,7 +28,8 @@ from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
-from repro.models.attention import KVCache, attention_layer, init_attention
+from repro.models.attention import (KVCache, PagedKVCache, attention_layer,
+                                    init_attention)
 from repro.models.layers import (Ctx, ctx_matmul, gelu_ffn, rms_norm,
                                  softcap, swiglu_ffn)
 
@@ -388,9 +389,7 @@ def make_cache(params, arch: ArchConfig, batch_size: int, ctx_len: int):
         stack = lambda t: jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (L,) + a.shape) + 0, t)
         return {"mlstm": stack(m), "slstm": stack(s)}
-    C = ctx_len if arch.attn_pattern == "global" or arch.window is None \
-        else (min(arch.window, ctx_len)
-              if arch.attn_pattern == "sliding" else ctx_len)
+    C = lane_capacity(arch, ctx_len)
     if arch.bfp_kv_cache:
         kv = KVCache(
             k=jnp.zeros((L, B, arch.n_kv_heads, C, arch.hd), jnp.int8),
@@ -406,6 +405,55 @@ def make_cache(params, arch: ArchConfig, batch_size: int, ctx_len: int):
     cache = {"kv": kv}
     if arch.ssm:
         h = ssm_mod.ssm_state_init(B, arch.n_heads, arch.d_inner,
+                                   arch.ssm_state)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (L,) + a.shape) + 0, h)
+    return cache
+
+
+def lane_capacity(arch: ArchConfig, ctx_len: int) -> int:
+    """Per-lane KV slot count the decode cache actually allocates: the
+    sliding-window archs ring over min(window, ctx_len); everything else
+    keeps the full ctx_len."""
+    if arch.attn_pattern == "sliding" and arch.window is not None:
+        return min(arch.window, ctx_len)
+    return ctx_len
+
+
+def make_paged_cache(params, arch: ArchConfig, batch_size: int,
+                     ctx_len: int, n_pages: int, page_size: int):
+    """Allocate an empty page-pooled decode cache (DESIGN.md §14): the KV
+    leaves become one shared [L, P, Hkv, ps, hd] pool + a [L, B, NP] page
+    table (NP = lane capacity / ps), instead of per-lane worst-case slabs.
+    SSM states stay dense per-lane (they are O(1) in sequence length —
+    nothing to page). xLSTM archs have no KV cache to page."""
+    if arch.xlstm:
+        raise ValueError("xlstm archs have no KV cache to page")
+    C = lane_capacity(arch, ctx_len)
+    if C % page_size:
+        raise ValueError(f"page_size {page_size} must divide the lane "
+                         f"capacity {C}")
+    L, P, ps = arch.n_layers, n_pages, page_size
+    NP = C // ps
+    dtype = jnp.dtype(arch.dtype)
+    pt = jnp.full((L, batch_size, NP), -1, jnp.int32)
+    if arch.bfp_kv_cache:
+        kv = PagedKVCache(
+            k=jnp.zeros((L, P, arch.n_kv_heads, ps, arch.hd), jnp.int8),
+            v=jnp.zeros((L, P, arch.n_kv_heads, ps, arch.hd), jnp.int8),
+            slot_pos=jnp.full((L, P, ps), -1, jnp.int32),
+            page_table=pt,
+            k_exp=jnp.zeros((L, P, arch.n_kv_heads, ps), jnp.int8),
+            v_exp=jnp.zeros((L, P, arch.n_kv_heads, ps), jnp.int8))
+    else:
+        kv = PagedKVCache(
+            k=jnp.zeros((L, P, arch.n_kv_heads, ps, arch.hd), dtype),
+            v=jnp.zeros((L, P, arch.n_kv_heads, ps, arch.hd), dtype),
+            slot_pos=jnp.full((L, P, ps), -1, jnp.int32),
+            page_table=pt)
+    cache = {"kv": kv}
+    if arch.ssm:
+        h = ssm_mod.ssm_state_init(batch_size, arch.n_heads, arch.d_inner,
                                    arch.ssm_state)
         cache["ssm"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (L,) + a.shape) + 0, h)

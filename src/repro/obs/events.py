@@ -50,6 +50,8 @@ KINDS: Dict[str, str] = {
     "serve/admit": "request admitted into a lane (prefill done)",
     "serve/complete": "request finished (ttft_s, tokens_per_sec)",
     "serve/queue": "request entered the overload queue",
+    "serve/preempt": "lane evicted on page exhaustion (re-queued at front)",
+    "serve/truncate": "request force-completed (pool cannot grow its lane)",
 }
 
 _KIND_RE = re.compile(r"^[a-z0-9_.]+(/[a-z0-9_.]+)?$")

@@ -1,2 +1,21 @@
-"""Continuous-batching serving engine over the HBFP decode step."""
+"""Serving plane: disaggregated prefill/insert/generate stages over the
+HBFP decode step, a paged BFP KV cache, and per-request sampling."""
 from repro.serve.engine import ServeEngine
+from repro.serve.paged_cache import (PagePool, clear_pages, insert_prefix,
+                                     pages_needed, set_page_table)
+from repro.serve.sampling import (GREEDY, SamplingParams, lane_key,
+                                  sample_one, sample_tokens)
+
+__all__ = [
+    "GREEDY",
+    "PagePool",
+    "SamplingParams",
+    "ServeEngine",
+    "clear_pages",
+    "insert_prefix",
+    "lane_key",
+    "pages_needed",
+    "sample_one",
+    "sample_tokens",
+    "set_page_table",
+]

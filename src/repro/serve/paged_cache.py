@@ -1,0 +1,176 @@
+"""Paged BFP KV-cache plumbing for the serving engine (DESIGN.md §14).
+
+Two halves:
+
+  * `PagePool` — the host-side allocator: a free list over the device
+    pool's page ids, with per-request ownership so completion (or
+    preemption) frees a request's pages in O(pages). Allocation is
+    on-demand: a lane holds pages for the tokens it has actually written,
+    not worst-case `ctx_len` slabs, so pool memory scales with live
+    tokens. `page_size` is aligned to the BFP exponent-block granularity
+    by the engine, so each page carries its K/V mantissas and their
+    shared exponents as one relocatable unit.
+
+  * jit-friendly cache-structure ops — `insert_prefix` scatters a
+    prefill-produced prefix cache into a lane (slab write or page-table
+    scatter), `clear_pages` resets freed pages' slot maps, and
+    `set_page_table` rebinds the device page table from the host mirror.
+    All dispatch on LEAF TYPE (`KVCache` / `PagedKVCache` NamedTuples),
+    not on path-name strings: ssm/xlstm state leaves are "anything that
+    isn't a KV cache" and take the lane-row write, which is pinned by a
+    routing regression test.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache, PagedKVCache
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+class PagePool:
+    """Free-list allocator over `n_pages` device pool pages."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError("n_pages and page_size must be >= 1")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._owned: Dict[int, List[int]] = {}   # rid -> page ids
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def occupancy(self) -> float:
+        return self.used_pages / self.n_pages
+
+    def owned(self, rid: int) -> List[int]:
+        return list(self._owned.get(rid, ()))
+
+    def alloc(self, rid: int, n: int) -> Optional[List[int]]:
+        """Take `n` pages for request `rid`; None (nothing taken) if the
+        pool can't satisfy the request — the caller preempts or queues."""
+        if n > len(self._free):
+            return None
+        got = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(rid, []).extend(got)
+        return got
+
+    def free(self, rid: int) -> List[int]:
+        """Return all of `rid`'s pages to the free list; returns the ids
+        (the engine clears their slot maps on device)."""
+        got = self._owned.pop(rid, [])
+        self._free.extend(got)
+        return got
+
+
+# ----------------------------------------------------------------------------
+# Typed cache-structure ops (leaf-type dispatch, no path-string matching)
+# ----------------------------------------------------------------------------
+
+def _is_kv(x) -> bool:
+    return isinstance(x, (KVCache, PagedKVCache))
+
+
+def _insert_slab(c: KVCache, p: KVCache, lane) -> KVCache:
+    """Overwrite lane `lane` of the dense cache with the FULL prefix slab
+    (capacity C, slot_pos -1 beyond the prompt). Writing the whole
+    capacity — not just [0, plen) — is what makes lane reuse sound: a
+    shorter request can never attend a previous tenant's stale tail
+    (pinned by test_lane_reuse_clears_stale_slots)."""
+    put = lambda big, small: big if small is None else \
+        jax.lax.dynamic_update_slice_in_dim(big, small.astype(big.dtype),
+                                            lane, axis=1)
+    return KVCache(*(put(b, s) for b, s in zip(c, p)))
+
+
+def _insert_pages(c: PagedKVCache, p: KVCache, lane, page_ids):
+    """Scatter the prefix slab into the lane's pool pages and bind its
+    page-table row. `page_ids` is the full-capacity row (NP entries, -1
+    beyond the allocated prefix pages — those writes drop)."""
+    L, P, ps = c.slot_pos.shape
+    NP = c.page_table.shape[2]
+    ids = jnp.where(page_ids < 0, P, page_ids)
+    paged = lambda t: t[:, 0].reshape(       # [L, C, ...] -> [L, NP, ps, ...]
+        L, NP, ps, *t.shape[3:])
+    # k/v/exps carry Hkv before the slot axis: [L, 1, Hkv, C(, hd)]
+    paged_h = lambda t: jnp.moveaxis(
+        t[:, 0].reshape(L, t.shape[2], NP, ps, *t.shape[4:]), 1, 2)
+    nk = c.k.at[:, ids].set(paged_h(p.k).astype(c.k.dtype), mode="drop")
+    nv = c.v.at[:, ids].set(paged_h(p.v).astype(c.v.dtype), mode="drop")
+    nsp = c.slot_pos.at[:, ids].set(paged(p.slot_pos), mode="drop")
+    nke = nve = None
+    if c.k_exp is not None:
+        nke = c.k_exp.at[:, ids].set(paged_h(p.k_exp), mode="drop")
+        nve = c.v_exp.at[:, ids].set(paged_h(p.v_exp), mode="drop")
+    row = jnp.broadcast_to(page_ids[None, None], (L, 1, NP))
+    npt = jax.lax.dynamic_update_slice(c.page_table, row, (0, lane, 0))
+    return PagedKVCache(nk, nv, nsp, npt, nke, nve)
+
+
+def insert_prefix(cache, prefix, lane, page_ids=None):
+    """Insert a prefill-produced prefix cache (B=1, full lane capacity)
+    into lane `lane` of the decode cache. KV leaves dispatch on type —
+    `KVCache` takes the whole-lane slab write, `PagedKVCache` the
+    page-table scatter (`page_ids` required) — and every other leaf
+    (ssm / mlstm / slstm states, [L, 1, ...]) takes the lane-row write.
+    `lane` may be traced; jit this with `page_ids` as a dynamic arg."""
+    def one(c, p):
+        if isinstance(c, PagedKVCache):
+            if page_ids is None:
+                raise ValueError("paged cache insert needs page_ids")
+            return _insert_pages(c, p, lane, page_ids)
+        if isinstance(c, KVCache):
+            return _insert_slab(c, p, lane)
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, p.astype(c.dtype), lane, axis=1)
+
+    return jax.tree.map(one, cache, prefix, is_leaf=_is_kv)
+
+
+def clear_pages(cache, page_ids):
+    """Return freed pages to the empty state: slot maps -1 AND payloads
+    zeroed. Zeroing the mantissas is load-bearing for the paged == slab
+    bit-identity contract: a recycled page must gather exactly like an
+    untouched slab slot (zeros), so masked scores/probs see identical
+    inputs even inside shared BFP activation-quantization blocks.
+    `page_ids` may be padded with -1 (those entries drop)."""
+    def one(c):
+        if isinstance(c, PagedKVCache):
+            P = c.slot_pos.shape[1]
+            ids = jnp.where(page_ids < 0, P, page_ids)
+            zero = lambda t: None if t is None else \
+                t.at[:, ids].set(0, mode="drop")
+            return c._replace(
+                k=zero(c.k), v=zero(c.v),
+                slot_pos=c.slot_pos.at[:, ids].set(-1, mode="drop"),
+                k_exp=zero(c.k_exp), v_exp=zero(c.v_exp))
+        return c
+
+    return jax.tree.map(one, cache, is_leaf=_is_kv)
+
+
+def set_page_table(cache, table):
+    """Rebind the device page table from the host mirror [B, NP] (the
+    engine's allocator state); broadcast over layers."""
+    def one(c):
+        if isinstance(c, PagedKVCache):
+            L = c.slot_pos.shape[0]
+            t = jnp.asarray(table, jnp.int32)
+            return c._replace(
+                page_table=jnp.broadcast_to(t[None], (L,) + t.shape) + 0)
+        return c
+
+    return jax.tree.map(one, cache, is_leaf=_is_kv)

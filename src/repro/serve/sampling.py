@@ -1,0 +1,93 @@
+"""Serving-time token sampling with per-lane RNG streams (DESIGN.md §14).
+
+The pre-PR-10 engine drew from one engine-wide PRNG key split once per
+batched decode step, so a request's sampled tokens depended on which other
+requests happened to share the batch (and on queue timing). Here every
+draw is keyed by the REQUEST and the TOKEN POSITION alone:
+
+    key(rid, pos) = fold_in(fold_in(key(seed), rid), pos)
+
+so a request replays the exact same tokens whether it runs alone, shares
+lanes with seven neighbours, or is preempted and re-prefilled mid-stream
+(the re-computed draw at position p uses the same (rid, p) key). Pinned by
+tests/test_serve_paged.py::test_sampling_independent_of_batch.
+
+`temperature == 0` is greedy argmax — bit-identical to the pre-sampling
+engine. top-k and nucleus (top-p) filtering compose: top-k first, then
+top-p over the surviving mass, then a categorical draw at `temperature`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Static sampling configuration (hashable: one jit variant per
+    distinct config). temperature 0 => greedy; top_k 0 => off; top_p 1.0
+    => off. `seed` is the stream root every (rid, pos) key derives from."""
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+GREEDY = SamplingParams(temperature=0.0)
+
+
+def lane_key(seed: int, rid, pos):
+    """The (request, position) PRNG key: independent of batch composition,
+    lane index, and step count."""
+    k = jax.random.key(seed)
+    return jax.random.fold_in(jax.random.fold_in(k, rid), pos)
+
+
+def _mask_top_k(logits, k: int):
+    if k <= 0 or k >= logits.shape[-1]:
+        return logits
+    kth = jax.lax.top_k(logits, k)[0][..., -1]
+    return jnp.where(logits >= kth, logits, NEG_INF)
+
+
+def _mask_top_p(logits, p: float):
+    if p >= 1.0:
+        return logits
+    srt = jnp.sort(logits)[..., ::-1]
+    probs = jax.nn.softmax(srt, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # smallest prefix whose mass reaches p; the first token always survives
+    keep = (cum - probs) < p
+    thr = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1)
+    return jnp.where(logits >= thr, logits, NEG_INF)
+
+
+def sample_one(logits, key, sp: SamplingParams):
+    """Draw one token id from unnormalized logits [V]."""
+    if sp.greedy:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    x = logits.astype(jnp.float32)
+    x = _mask_top_k(x, sp.top_k)
+    x = _mask_top_p(x, sp.top_p)
+    return jax.random.categorical(key, x / sp.temperature).astype(jnp.int32)
+
+
+def sample_tokens(logits, rids, poss, sp: SamplingParams):
+    """Batched draw: logits [B, V], rids [B], poss [B] -> int32 [B].
+    Each lane's draw uses its own (rid, pos) key, so the result for lane b
+    is a pure function of (logits[b], rid[b], pos[b], sp) — co-resident
+    lanes cannot perturb it. Negative rids (free lanes) still produce a
+    (discarded) token without tripping fold_in."""
+    if sp.greedy:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    keys = jax.vmap(lambda r, p: lane_key(sp.seed, r, p))(
+        jnp.maximum(rids, 0), poss)
+    return jax.vmap(lambda lg, k: sample_one(lg, k, sp))(logits, keys)

@@ -80,22 +80,28 @@ def narrow_serving_params(params, arch: ArchConfig, hbfp):
 def prefill_to_decode_cache(cache, arch: ArchConfig, ctx_len: int):
     """Grow a prefill cache (C = prompt length) into a decode cache
     (C = ctx_len ring). Slot i of the prefill cache holds position i, which
-    in a ctx_len ring lives at slot i % ctx_len = i (prompt < ctx_len)."""
-    def grow(leaf, fill):
-        # KV leaves: [L, B, Hkv, C, hd] / slot_pos [L, B, C]
-        if leaf.ndim == 5:
-            pad = ctx_len - leaf.shape[3]
-            return jnp.pad(leaf, ((0, 0),) * 3 + ((0, pad), (0, 0)))
-        pad = ctx_len - leaf.shape[2]
-        return jnp.pad(leaf, ((0, 0), (0, 0), (0, pad)),
-                       constant_values=fill)
+    in a ctx_len ring lives at slot i % ctx_len = i (prompt < ctx_len).
 
-    def one(path, leaf):
-        name = "/".join(str(getattr(k, "key", k)) for k in path)
-        if name.endswith("slot_pos"):
-            return grow(leaf, -1)
-        if "kv" in name and leaf.ndim == 5:
-            return grow(leaf, 0)
-        return leaf  # ssm / xlstm states are length-independent
+    Dispatches on leaf TYPE: `KVCache` leaves grow their slot axis (k/v
+    mantissas and exponents pad with 0, slot_pos with -1 = empty); every
+    other leaf (ssm / mlstm / slstm states) is length-independent and
+    passes through untouched — no path-name matching, so renaming a cache
+    key can't silently misroute a state tensor."""
+    from repro.models import KVCache
 
-    return jax.tree_util.tree_map_with_path(one, cache)
+    def grow_kv(c: KVCache) -> KVCache:
+        def grow(leaf, fill, axis):
+            if leaf is None or leaf.shape[axis] >= ctx_len:
+                return leaf
+            pad = [(0, 0)] * leaf.ndim
+            pad[axis] = (0, ctx_len - leaf.shape[axis])
+            return jnp.pad(leaf, pad, constant_values=fill)
+
+        # stacked leaves: k/v/exps [L, B, Hkv, C(, hd)], slot_pos [L, B, C]
+        return KVCache(k=grow(c.k, 0, 3), v=grow(c.v, 0, 3),
+                       slot_pos=grow(c.slot_pos, -1, 2),
+                       k_exp=grow(c.k_exp, 0, 3), v_exp=grow(c.v_exp, 0, 3))
+
+    return jax.tree.map(
+        lambda c: grow_kv(c) if isinstance(c, KVCache) else c, cache,
+        is_leaf=lambda x: isinstance(x, KVCache))

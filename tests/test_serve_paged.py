@@ -1,0 +1,274 @@
+"""Paged BFP KV cache + disaggregated serving stages (DESIGN.md §14):
+bit-identity of paged decode vs the dense slab engine, chunked-prefill
+equivalence, FIFO admission with paging under overload, oldest-wins
+preemption, pool truncate termination, typed state routing (ssm/xlstm),
+rid-keyed sampling determinism, and the bounded stats map."""
+import dataclasses
+
+import jax
+import pytest
+
+# decode-loop integration tests — excluded from the fast CI lane
+pytestmark = pytest.mark.slow
+
+from repro.configs import get_arch
+from repro.core import HBFP8_16
+from repro.models import init_params
+from repro.obs import ManualClock, MemorySink, Recorder
+from repro.serve import SamplingParams, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    arch = get_arch("yi-9b").smoke()
+    params = init_params(jax.random.key(0), arch)
+    return arch, params
+
+
+def _gen_isolated(arch, params, prompt, n, **kw):
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64, **kw)
+    rid = eng.submit(prompt, max_new_tokens=n)
+    return eng.drain()[rid]
+
+
+def _run_trace(eng):
+    """Drive one fixed request trace (overload + mid-flight admission +
+    lane reuse) and return {rid: tokens}."""
+    res = {}
+    for p, n in ([5, 9, 2], 6), ([7, 7, 7, 7], 4), ([1, 2, 3], 5):
+        eng.submit(p, max_new_tokens=n)
+    for _ in range(3):
+        eng.step()
+    eng.submit([4, 4], max_new_tokens=3)          # mid-flight admission
+    res.update(eng.drain())
+    eng.submit([8, 1, 6], max_new_tokens=4)        # lane + page reuse
+    res.update(eng.drain())
+    return res
+
+
+def test_paged_decode_bit_identical_to_slab(setup):
+    """THE paging contract: a paged engine's decode is bit-identical to
+    the dense-slab engine on an identical request trace — page scatter,
+    gather-by-table, page reuse, and lane reuse included."""
+    arch, params = setup
+    slab = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64,
+                       paged=False)
+    paged = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64,
+                        paged=True)
+    assert _run_trace(paged) == _run_trace(slab)
+    # every page returned: the pool drains with the traffic
+    assert paged.pool.used_pages == 0
+    assert paged.metrics.get("serve_page_occupancy").value == 0.0
+
+
+def test_page_size_aligns_to_bfp_block(setup):
+    """Default page size is the BFP exponent-block size when it divides
+    the lane capacity — mantissas + shared exponents relocate as a unit."""
+    arch, params = setup
+    eng = ServeEngine(arch, params, HBFP8_16.with_block(8), max_batch=2,
+                      ctx_len=64)
+    assert eng.page_size == 8                 # = cfg.block_size
+    assert eng.NP * eng.page_size == eng.C
+    # block_size that can't divide the capacity → power-of-two fallback
+    deflt = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64)
+    assert HBFP8_16.block_size == 128 and deflt.page_size == 16
+    with pytest.raises(ValueError, match="divide"):
+        ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64,
+                    page_size=24)
+
+
+def test_chunked_prefill_matches_oneshot(setup):
+    """A long prompt streamed through the extension stage in small chunks
+    admits with the same greedy FIRST token as one-shot prefill. (Full
+    sequences are argmax-robust but not bitwise-guaranteed under BFP:
+    activation exponents are shared per forward pass, so chunk boundaries
+    perturb the K/V quantization at the last mantissa bit.) Without
+    quantization the whole continuation is identical."""
+    arch, params = setup
+    prompt = [(i * 7) % 50 + 1 for i in range(29)]
+    one = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64)
+    chk = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64,
+                      prefill_chunk=7)
+    r1 = one.submit(prompt, max_new_tokens=6)
+    r2 = chk.submit(prompt, max_new_tokens=6)
+    assert chk.drain()[r2][0] == one.drain()[r1][0]
+    # fp path: chunking is exactly equivalent end to end
+    one_fp = ServeEngine(arch, params, None, max_batch=2, ctx_len=64)
+    chk_fp = ServeEngine(arch, params, None, max_batch=2, ctx_len=64,
+                         prefill_chunk=7)
+    r3 = one_fp.submit(prompt, max_new_tokens=6)
+    r4 = chk_fp.submit(prompt, max_new_tokens=6)
+    assert chk_fp.drain()[r4] == one_fp.drain()[r3]
+
+
+def test_async_prefill_interleaves_and_matches(setup):
+    """async_prefill: requests always queue; each tick advances one
+    prefill chunk AND the batched decode, and the final outputs equal the
+    synchronous engine's."""
+    arch, params = setup
+    sync = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64,
+                       prefill_chunk=5)
+    asyn = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64,
+                       prefill_chunk=5, async_prefill=True)
+    long_prompt = [(i * 3) % 40 + 1 for i in range(17)]
+    rids_s = [sync.submit([5, 9, 2], 8), sync.submit(long_prompt, 4)]
+    rids_a = [asyn.submit([5, 9, 2], 8), asyn.submit(long_prompt, 4)]
+    overlapped = False
+    res_a = {}
+    while any(asyn.slots) or asyn.pending or asyn._inflight is not None:
+        out = asyn.step()
+        if asyn._inflight is not None and any(asyn.slots):
+            overlapped = True              # decode ran while prefill was
+        for r, t in out.items():           # mid-flight (disaggregation)
+            res_a.setdefault(r, []).append(t)
+    res_s = sync.drain()
+    assert overlapped
+    for rs, ra in zip(rids_s, rids_a):
+        assert res_a[ra] == res_s[rs]
+
+
+def test_fifo_admission_under_overload_with_paging(setup):
+    """Overload with one paged lane: queued requests admit in FIFO order
+    and each produces exactly its isolated output (recycled pages gather
+    like fresh ones)."""
+    arch, params = setup
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=1, ctx_len=64,
+                      paged=True)
+    prompts = {eng.submit([3, 1], max_new_tokens=3): [3, 1],
+               eng.submit([5, 9, 2], max_new_tokens=4): [5, 9, 2],
+               eng.submit([7, 7], max_new_tokens=2): [7, 7]}
+    assert len(eng.pending) == 2
+    assert [r for r, _, _ in eng.pending] == sorted(prompts)[1:]
+    res = eng.drain()
+    assert sorted(res) == sorted(prompts)
+    for rid, prompt in prompts.items():
+        assert res[rid] == _gen_isolated(arch, params, prompt,
+                                         len(res[rid])), rid
+    assert eng.pool.used_pages == 0
+
+
+def test_preemption_oldest_wins(setup):
+    """When the pool runs dry the YOUNGEST active lane is evicted (strict
+    oldest-wins): the older request's output is untouched (bit-equal to
+    isolated), the preempted one re-queues at the FRONT, resumes, and
+    still completes with its full-length correct output."""
+    arch, params = setup
+    ms = MemorySink()
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64,
+                      page_size=4, n_pages=6,
+                      recorder=Recorder([ms], sync=lambda x: x))
+    r_old = eng.submit([5, 9, 2], max_new_tokens=16)
+    r_new = eng.submit([7, 7, 7], max_new_tokens=16)
+    res = eng.drain()
+    assert eng.metrics.get("serve_preemptions_total").value >= 1
+    evs = ms.of_kind("serve/preempt")
+    assert evs and all(e.data["rid"] == r_new for e in evs)
+    assert res[r_old] == _gen_isolated(arch, params, [5, 9, 2], 16)
+    assert res[r_new] == _gen_isolated(arch, params, [7, 7, 7], 16)
+    assert eng.pool.used_pages == 0
+
+
+def test_tiny_pool_truncates_instead_of_livelock(setup):
+    """Degenerate case: a single lane whose sequence outgrows the whole
+    pool self-evicts, cannot re-admit, and is force-completed with the
+    tokens it has — drain() terminates and delivers them."""
+    arch, params = setup
+    ms = MemorySink()
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=1, ctx_len=64,
+                      page_size=4, n_pages=2,
+                      recorder=Recorder([ms], sync=lambda x: x))
+    rid = eng.submit([5, 9, 2], max_new_tokens=32)
+    res = eng.drain()
+    assert ms.of_kind("serve/truncate")
+    assert 0 < len(res[rid]) < 32
+    # the delivered prefix is the true generation up to the truncation
+    want = _gen_isolated(arch, params, [5, 9, 2], 32)
+    assert res[rid] == want[:len(res[rid])]
+
+
+def test_sampling_keyed_by_rid_and_pos(setup):
+    """Sampled draws fold (rid, position) into the key: a request's
+    tokens are identical whether it runs alone or shares the batch, and
+    independent of wall-clock (ManualClock) — batch composition and
+    timing can't change an output."""
+    arch, params = setup
+    sp = SamplingParams(temperature=0.9, top_k=20, seed=7)
+    solo = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64,
+                       sampling=sp,
+                       recorder=Recorder([MemorySink()], clock=ManualClock(),
+                                         sync=lambda x: x))
+    r_solo = solo.submit([5, 9, 2], max_new_tokens=8)
+    out_solo = solo.drain()[r_solo]
+
+    crowd = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64,
+                        sampling=sp)
+    r_same = crowd.submit([5, 9, 2], max_new_tokens=8)   # same rid (0)
+    crowd.submit([7, 7, 7, 7], max_new_tokens=6)         # shares the batch
+    assert crowd.drain()[r_same] == out_solo
+    # and two requests with different rids diverge (keys actually differ)
+    solo2 = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=64,
+                        sampling=sp)
+    solo2.submit([1], max_new_tokens=1)                   # burn rid 0
+    r_other = solo2.submit([5, 9, 2], max_new_tokens=8)   # rid 1
+    assert solo2.drain()[r_other] != out_solo
+
+
+def test_request_stats_bounded_by_stats_cap(setup):
+    """request_stats keeps the stats_cap most recent completions; evicted
+    records are counted in serve_stats_dropped_total (PR-5 meta_log_cap
+    pattern)."""
+    arch, params = setup
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=1, ctx_len=32,
+                      stats_cap=2)
+    rids = [eng.submit([i + 1], max_new_tokens=2) for i in range(4)]
+    eng.drain()
+    assert sorted(eng.request_stats) == rids[-2:]     # most recent kept
+    assert eng.metrics.get("serve_stats_dropped_total").value == 2
+    assert eng.metrics.get("serve_completions_total").value == 4
+    with pytest.raises(ValueError, match="stats_cap"):
+        ServeEngine(arch, params, HBFP8_16, stats_cap=0)
+
+
+def test_typed_routing_ssm_states_survive_paging():
+    """Insert dispatches on leaf TYPE, not path names: an ssm arch's
+    recurrent-state leaves take the lane-row write while its KV leaves
+    page — and the paged engine still matches the slab engine exactly."""
+    arch = get_arch("hymba-1-5b").smoke()
+    params = init_params(jax.random.key(0), arch)
+    slab = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=32,
+                       paged=False)
+    paged = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=32,
+                        paged=True)
+    r1 = slab.submit([5, 9, 2], max_new_tokens=5)
+    r2 = paged.submit([5, 9, 2], max_new_tokens=5)
+    assert paged.drain()[r2] == slab.drain()[r1]
+
+
+def test_xlstm_has_no_kv_cache_to_page():
+    """xlstm leaves are all recurrent state — paging is meaningless and
+    explicitly rejected; the default (paged=None) auto-disables it."""
+    arch = get_arch("xlstm-350m").smoke()
+    params = init_params(jax.random.key(0), arch)
+    with pytest.raises(ValueError, match="xlstm"):
+        ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=32,
+                    paged=True)
+    eng = ServeEngine(arch, params, HBFP8_16, max_batch=2, ctx_len=32)
+    assert not eng.paged
+    rid = eng.submit([5, 9, 2], max_new_tokens=4)
+    assert len(eng.drain()[rid]) == 4
+
+
+def test_lane_reuse_clears_stale_slots(setup):
+    """A short request admitted into a lane previously holding a longer
+    one can never attend the old tenant's KV tail: slab inserts write the
+    whole capacity, paged completion zeroes freed pages. Pinned on both
+    backends."""
+    arch, params = setup
+    for paged in (False, True):
+        eng = ServeEngine(arch, params, HBFP8_16, max_batch=1, ctx_len=64,
+                          paged=paged)
+        eng.submit([(i * 5) % 30 + 1 for i in range(20)], max_new_tokens=8)
+        eng.drain()
+        rid = eng.submit([4], max_new_tokens=4)      # same lane, shorter
+        assert eng.drain()[rid] == _gen_isolated(
+            arch, params, [4], 4), f"paged={paged}"

@@ -26,7 +26,7 @@ import os
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-PACKAGES = ("repro.precision", "repro.obs")
+PACKAGES = ("repro.precision", "repro.obs", "repro.serve")
 SNAPSHOT = os.path.join(ROOT, "tools", "api_surface.json")
 
 

@@ -11,7 +11,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ["README.md", "docs/DESIGN.md", "docs/KERNELS.md",
-        "docs/OBSERVABILITY.md", "ROADMAP.md"]
+        "docs/OBSERVABILITY.md", "docs/SERVING.md", "ROADMAP.md"]
 _TOP = ("src/", "tests/", "benchmarks/", "examples/", "docs/", "tools/")
 
 
